@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-scale
+timings; real perf numbers come from the roofline, not wall clock here)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def kernel_microbench(emit) -> None:
+    from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.ssd import ssd, ssd_sequential
+
+    key = jax.random.key(0)
+    B, S, H, KV, Dh = 1, 128, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, KV, Dh))
+    v = jax.random.normal(ks[2], (B, S, KV, Dh))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    valid = jnp.ones((B, S), bool)
+
+    us = _time(lambda: flash_attention(q, k, v, pos, pos, valid, block_q=64, block_k=64))
+    emit("kernel_flash_attention_128", us, "interpret-mode")
+    us_ref = _time(lambda: flash_attention_ref(q, k, v, pos, pos, valid))
+    emit("kernel_flash_attention_ref_128", us_ref, "jnp oracle")
+
+    qd = q[:, :1]
+    qpos = jnp.full((B, 1), S - 1, jnp.int32)
+    us = _time(lambda: decode_attention(qd, k, v, qpos, pos, valid, block_k=64))
+    emit("kernel_decode_attention_128", us, "interpret-mode")
+
+    L, Hs, P, N = 128, 2, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, L, Hs, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, L, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hs,)) * 0.5)
+    Bv = jax.random.normal(ks[3], (1, L, 1, N))
+    Cv = jax.random.normal(ks[4], (1, L, 1, N))
+    us = _time(lambda: ssd(x, dt, A, Bv, Cv, 32))
+    emit("kernel_ssd_128", us, "interpret-mode")
+    us_seq = _time(lambda: ssd_sequential(x, dt, A, Bv, Cv))
+    emit("kernel_ssd_sequential_128", us_seq, "jnp recurrence oracle")

@@ -1,0 +1,38 @@
+"""Render the roofline table from dry-run JSON records (if present)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = [
+    "results/dryrun_single.json",
+    "results/dryrun_multi.json",
+]
+
+
+def roofline_table(emit) -> None:
+    found = False
+    for path in RESULTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        with open(path) as f:
+            records = json.load(f)
+        for r in records:
+            key = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            if r.get("status") != "ok":
+                emit(key, -1, r.get("status", "?"))
+                continue
+            if r.get("cost_pass"):
+                emit(
+                    key,
+                    max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                    f"dom={r['dominant']} c={r['compute_s']*1e3:.1f}ms "
+                    f"m={r['memory_s']*1e3:.1f}ms x={r['collective_s']*1e3:.1f}ms "
+                    f"useful={r['useful_flops_ratio']:.2f}",
+                )
+            else:
+                emit(key, r.get("compile_s", 0) * 1e6, "compiled (proof only)")
+    if not found:
+        emit("roofline_table", 0, "no dry-run records yet; run repro.launch.dryrun")

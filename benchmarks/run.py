@@ -1,0 +1,40 @@
+"""Benchmark entry point. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig3 fig6  # subset by prefix
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from .kernel_bench import kernel_microbench
+    from .paper_figures import ALL_FIGURES
+    from .roofline_table import roofline_table
+
+    wanted = [a.lower() for a in sys.argv[1:]]
+    rows = []
+
+    def emit(name: str, us_per_call: float, derived: str = "") -> None:
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    benches = ALL_FIGURES + [kernel_microbench, roofline_table]
+    for bench in benches:
+        tag = bench.__name__
+        if wanted and not any(tag.startswith(w) or w in tag for w in wanted):
+            continue
+        try:
+            bench(emit)
+        except Exception as e:  # noqa: BLE001 — a failing bench must not hide others
+            emit(f"{tag}_ERROR", -1.0, f"{type(e).__name__}: {e}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

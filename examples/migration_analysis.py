@@ -1,0 +1,31 @@
+"""Beyond-paper analysis: migrate internal model state across pods vs
+re-prefill the token context at the new pod (paper §5's open question).
+
+    PYTHONPATH=src python examples/migration_analysis.py [--context 32768]
+"""
+
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ASSIGNED
+from repro.core.mesh_context import migration_vs_reprefill
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--context", type=int, default=32_768)
+    args = ap.parse_args()
+
+    print(f"context length = {args.context}; 256 chips/pod, v5e constants\n")
+    for name in sorted(ASSIGNED):
+        print(migration_vs_reprefill(ASSIGNED[name], args.context).to_row())
+    print(
+        "\nSSM/hybrid archs migrate O(1) state — the strongest case for "
+        "DisCEdge-style state handover; dense archs trade linear KV bytes "
+        "against linear re-prefill FLOPs."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""End-to-end serving driver — the paper's full evaluation scenario.
+
+Runs the 9-turn robotics conversation (paper Appendix A.1) with node
+switches at turns 3/5/7 (paper Fig. 6) under all three context modes and
+prints the comparison table: response time, sync overhead, request sizes.
+
+    PYTHONPATH=src python examples/serve_mobile_client.py [--real-engine]
+
+With --real-engine a small JAX model serves every request (slower, real
+tokenize+prefill+decode); default uses the calibrated analytic service so
+the table reproduces the paper's numbers in seconds.
+"""
+
+import argparse
+import statistics
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ContextMode
+from repro.edge import EchoLLMService, EdgeCluster, LLMClient
+from repro.models import ModelConfig
+from repro.serving import JaxLLMService
+from repro.store import Link
+
+PROMPTS = [
+    "What are the fundamental components of an autonomous mobile robot?",
+    "You mentioned sensors. What are the most common types for obstacle avoidance?",
+    "Can you explain the concept of a PID controller in the context of motor control?",
+    "Write a simple Python function for a proportional (P) controller.",
+    "In your previous code, what do the kp and error variables represent?",
+    "How would you modify that function to include the integral (I) component?",
+    "Now, let's talk about localization. What is SLAM?",
+    "What are some of the main challenges when implementing that on a small, low-power robot?",
+    "Can you compare the EKF SLAM and Particle Filter SLAM approaches?",
+]
+NODES = ["m2", "m2", "tx2", "tx2", "m2", "m2", "tx2", "tx2", "m2"]
+
+
+def make_service_factory(real_engine: bool):
+    if real_engine:
+        cfg = ModelConfig(
+            name="paper-qwen-mini", arch_type="dense", n_layers=2, d_model=128,
+            n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=8192, qkv_bias=True,
+            param_dtype="float32", compute_dtype="float32",
+        )
+        svc = JaxLLMService.create("paper-qwen-mini", cfg, max_len=2048)
+        return lambda nid: svc
+    profiles = {
+        "m2": dict(prefill_ms_per_token=0.25, decode_ms_per_token=45.0,
+                   tokenize_scale=3.0),
+        "tx2": dict(prefill_ms_per_token=1.0, decode_ms_per_token=180.0,
+                    tokenize_scale=40.0),
+    }
+    return lambda nid: EchoLLMService(
+        model="paper-qwen-mini", vocab_size=151936, **profiles[nid]
+    )
+
+
+def run(mode: ContextMode, factory) -> dict:
+    cluster = EdgeCluster.build(
+        ["m2", "tx2"], factory,
+        inter_node_link=Link(latency_ms=2.0, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=5.0, bandwidth_mbps=20.0),
+    )
+    client = LLMClient(cluster, model="paper-qwen-mini", mode=mode,
+                       max_new_tokens=16)
+    rts = []
+    for p, n in zip(PROMPTS, NODES):
+        r = client.chat(p, n)
+        assert r.error is None, r.error
+        rts.append(r.timing.response_time_ms)
+        client.think(1500)
+    cluster.converge()
+    return {
+        "rt_median": statistics.median(rts),
+        "rts": rts,
+        "sync": cluster.sync_bytes(),
+        "req": client.request_bytes_log,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real-engine", action="store_true")
+    args = ap.parse_args()
+    factory = make_service_factory(args.real_engine)
+
+    results = {m: run(m, factory) for m in ContextMode}
+    print(f"\n{'mode':12s} {'rt_median':>10s} {'sync_bytes':>11s} "
+          f"{'req_median':>11s}")
+    for m, r in results.items():
+        print(f"{m.value:12s} {r['rt_median']:>9.1f}ms {r['sync']:>10d}B "
+              f"{statistics.median(r['req']):>10.0f}B")
+
+    tok, raw = results[ContextMode.TOKENIZED], results[ContextMode.RAW]
+    cs = results[ContextMode.CLIENT_SIDE]
+    print(f"\ntokenized vs raw:     RT -{(1-tok['rt_median']/raw['rt_median'])*100:.2f}%  "
+          f"sync -{(1-tok['sync']/raw['sync'])*100:.1f}%   (paper: -14.46% / -15%)")
+    print(f"edge vs client-side:  RT -{(1-tok['rt_median']/cs['rt_median'])*100:.2f}%  "
+          f"req  -{(1-statistics.median(tok['req'])/statistics.median(cs['req']))*100:.1f}%"
+          f"   (paper: -5.93% / -90%)")
+    print("\nper-turn RT (ms), switches at turns 3/5/7:")
+    for i in range(9):
+        mark = " *" if i in (2, 4, 6) else ""
+        print(f"  turn {i+1}: tok={tok['rts'][i]:7.1f} raw={raw['rts'][i]:7.1f} "
+              f"client={cs['rts'][i]:7.1f}{mark}")
+
+
+if __name__ == "__main__":
+    main()

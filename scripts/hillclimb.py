@@ -1,0 +1,95 @@
+"""§Perf hillclimb driver: lower a (arch × shape) combo under a named set of
+optimization knobs, record the roofline deltas.
+
+    PYTHONPATH=src python scripts/hillclimb.py dbrx-132b train_4k \
+        --variant moe_shard_map --out results/hillclimb_dbrx.json
+
+Variants compose config + launcher knobs; each run appends a JSON record so
+EXPERIMENTS.md §Perf can show the full iteration path.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# knob sets: (config overrides, lower_combo kwargs)
+VARIANTS = {
+    "baseline": ({}, {}),
+    "no_zero1": ({}, {"zero1": False}),
+    "act_seq": ({}, {"act_seq": True}),
+    "fsdp": ({}, {"fsdp": True}),
+    "fsdp_act_seq": ({}, {"fsdp": True, "act_seq": True}),
+    "accum16": ({"grad_accum": 16}, {}),
+    "accum32": ({"grad_accum": 32}, {}),
+    "accum16_act_seq": ({"grad_accum": 16}, {"act_seq": True}),
+    "accum32_act_seq": ({"grad_accum": 32}, {"act_seq": True}),
+    "ce_onehot": ({"ce_impl": "onehot"}, {}),
+    "ce_onehot_act_seq": ({"ce_impl": "onehot"}, {"act_seq": True}),
+    "moe_shard_map": ({"moe_impl": "shard_map"}, {}),
+    "moe_shard_map_ce": ({"moe_impl": "shard_map", "ce_impl": "onehot"}, {}),
+    "no_remat": ({"remat": False}, {}),
+    "cache_int8": ({}, {"cache_dtype": "int8"}),
+    "combined_train": (
+        {"ce_impl": "onehot", "moe_impl": "shard_map"},
+        {"act_seq": True},
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+    from repro.configs import get_config
+
+    cfg_over, kw = VARIANTS[args.variant]
+    cache_dtype = kw.pop("cache_dtype", None)
+
+    # config overrides ride through a patched get_config
+    if cfg_over:
+        base = get_config(args.arch)
+        patched = base.replace(**cfg_over)
+        dr.get_config = lambda name, _p=patched, _b=base, _orig=get_config: (
+            _p if name == args.arch else _orig(name)
+        )
+    if cache_dtype is not None:
+        import jax.numpy as jnp
+        from repro.launch import shapes as shp
+        from repro.models import make_decode_caches
+
+        orig = shp.decode_cache_abstract
+
+        def patched_cache(cfg, shape):
+            import jax
+            return jax.eval_shape(
+                lambda: make_decode_caches(
+                    cfg, shape.global_batch, shape.seq_len, dtype=jnp.int8
+                )
+            )
+
+        shp.decode_cache_abstract = patched_cache
+        dr.decode_cache_abstract = patched_cache
+
+    rec = dr.lower_combo(args.arch, args.shape, multi_pod=args.multi_pod, **kw)
+    rec["variant"] = args.variant
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            existing = json.load(open(args.out))
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        json.dump(existing + [rec], open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

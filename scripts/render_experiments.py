@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run JSON.
+
+    PYTHONPATH=src python scripts/render_experiments.py \
+        results/dryrun_single.json results/dryrun_multi.json > results/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.1f}GiB"
+
+
+def main() -> None:
+    records = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            records.extend(json.load(f))
+
+    print("### Dry-run results (lower+compile per arch × shape × mesh)\n")
+    print("| arch | shape | mesh | status | variant | args/dev | temp/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r.get('status','?')[:60]} | - | - | - | - |")
+            continue
+        mem = r.get("memory_analysis", "")
+        import re
+
+        def grab(name):
+            m = re.search(name + r"=(\d+)", mem)
+            return int(m.group(1)) if m else None
+
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{r.get('attn_variant','full')}"
+              f"{'+fsdp' if r.get('fsdp') else ''}"
+              f"{'+sp' if r.get('act_seq') else ''} | "
+              f"{fmt_bytes(grab('argument_size_in_bytes'))} | "
+              f"{fmt_bytes(grab('temp_size_in_bytes'))} | "
+              f"{r.get('compile_s', 0):.1f}s |")
+
+    print("\n### Roofline terms (single-pod, per chip; v5e constants)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful FLOP ratio | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r.get("status") != "ok" or not r.get("cost_pass"):
+            continue
+        note = ""
+        if r["dominant"] == "collective":
+            note = "collective-bound: resharding/all-gather dominates"
+        elif r["dominant"] == "memory":
+            note = "HBM-traffic bound (HLO bytes, unfused upper bound)"
+        else:
+            note = "MXU-bound"
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f}ms | "
+              f"{r['memory_s']*1e3:.2f}ms | {r['collective_s']*1e3:.2f}ms | "
+              f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | {note} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""DisCEdge-JAX: distributed context management for LLM serving at the edge,
+rebuilt as a multi-pod JAX framework. See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,26 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec audio tokens.
+
+48L, d_model 1536, 24 heads (MHA, kv=24, d_head 64), d_ff 6144, vocab 2048
+per codebook, 4 codebooks with delay pattern. The EnCodec conv codec is the
+STUB modality frontend: input_specs provides the 4 parallel token streams.
+Adaptation: original uses learned sinusoidal positions; we use RoPE
+(DESIGN.md hardware-adaptation table). [arXiv:2306.05284]
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_head=64,
+    d_ff=6144,
+    vocab_size=2048,
+    mlp_type="gelu",
+    n_codebooks=4,
+    frontend="audio_codec",
+    source="[arXiv:2306.05284]",
+)

@@ -1,0 +1,49 @@
+"""DisCEdge core — the paper's primary contribution.
+
+Distributed context management for LLM serving at the edge: tokenized
+context values, the Context Manager middleware, and the client-driven
+turn-counter consistency protocol on top of the eventually consistent
+distributed KV store (repro.store).
+"""
+
+from .protocol import (
+    ConsistencyPolicy,
+    ContextMode,
+    Request,
+    Response,
+    StaleContextError,
+    Timing,
+)
+from .tokens import RawContext, TokenizedContext
+from .session import ChatTurn, Session, context_key, fresh_session_id, fresh_user_id
+from .consistency import (
+    ReadResult,
+    RetryPolicy,
+    check_monotonic_reads,
+    check_read_your_writes,
+    read_with_turn_check,
+)
+from .manager import ContextManager, ServiceResult
+
+__all__ = [
+    "ConsistencyPolicy",
+    "ContextMode",
+    "Request",
+    "Response",
+    "StaleContextError",
+    "Timing",
+    "RawContext",
+    "TokenizedContext",
+    "ChatTurn",
+    "Session",
+    "context_key",
+    "fresh_session_id",
+    "fresh_user_id",
+    "ReadResult",
+    "RetryPolicy",
+    "check_monotonic_reads",
+    "check_read_your_writes",
+    "read_with_turn_check",
+    "ContextManager",
+    "ServiceResult",
+]

@@ -1,0 +1,220 @@
+"""The Context Manager — DisCEdge's core component (paper §3.1).
+
+A stationary middleware on each edge node between clients and the LLM
+Service. It owns the context lifecycle:
+
+- assigns user/session identifiers on first contact;
+- enforces the turn-counter consistency protocol against its local KV
+  replica (retry + backoff, strong or available policy);
+- constructs the model input: in TOKENIZED mode it concatenates the stored
+  pre-tokenized context with the freshly tokenized new prompt (only the new
+  prompt is tokenized); in RAW mode it re-renders and re-tokenizes the entire
+  history; in CLIENT_SIDE mode it forwards the client-shipped history
+  untouched (to the LLM Service, raw and client-side are identical — §4.1);
+- updates the stored context *asynchronously after* the response is sent,
+  so the update never sits on the client-observable path (§4.1/§4.2.1).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Tuple
+
+from ..store.distributed import DistributedKVStore
+from ..tokenizer import (
+    ByteLevelBPE,
+    assistant_header,
+    encode_turn,
+    render_turn,
+)
+from .consistency import ReadResult, RetryPolicy, read_with_turn_check
+from .protocol import (
+    ConsistencyPolicy,
+    ContextMode,
+    Request,
+    Response,
+    StaleContextError,
+    Timing,
+)
+from .session import context_key, fresh_session_id, fresh_user_id
+from .tokens import RawContext, TokenizedContext
+
+
+class LLMServiceProtocol(Protocol):
+    """Paper §3.2 — any inference framework that (1) accepts a pre-tokenized
+    'context' parameter next to the prompt tokens and (2) serves the same
+    model/tokenizer as its keygroup peers."""
+
+    model: str
+    tokenizer: ByteLevelBPE
+
+    def completion(
+        self, context_ids: List[int], prompt_ids: List[int], max_new_tokens: int
+    ) -> "ServiceResult": ...
+
+
+@dataclass
+class ServiceResult:
+    text: str
+    token_ids: List[int]
+    inference_ms: float
+
+
+@dataclass
+class ContextManager:
+    node_id: str
+    store: DistributedKVStore
+    service: LLMServiceProtocol
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    context_ttl_ms: Optional[float] = None
+
+    @property
+    def tokenize_scale(self) -> float:
+        """Hardware-calibrated clock factor for tokenization time: the BPE
+        work is real, but this host is much faster than the paper's edge
+        CPUs (measured 4–50 ms/turn on the TX2, <1 ms on the M2 for the same
+        work our encoder does in ~0.1–1.5 ms). Services may expose
+        ``tokenize_scale`` to model their node's CPU class; default 1."""
+        return float(getattr(self.service, "tokenize_scale", 1.0))
+
+    # ---------------------------------------------------------------
+    @property
+    def tokenizer(self) -> ByteLevelBPE:
+        return self.service.tokenizer
+
+    @property
+    def keygroup(self) -> str:
+        return self.service.model
+
+    def handle(self, req: Request) -> Response:
+        """Process one client request end to end (network legs are accounted
+        by the EdgeNode/client wrappers; this method covers tokenize, context
+        read, inference, and the async update)."""
+        net = self.store.network
+        timing = Timing()
+        user_id = req.user_id or fresh_user_id()
+        session_id = req.session_id or fresh_session_id()
+        key = context_key(user_id, session_id)
+        tok = self.tokenizer
+
+        stale = False
+        context_ids: List[int] = []
+        prompt_ids: List[int] = []
+        stored_tok: Optional[TokenizedContext] = None
+        stored_raw: Optional[RawContext] = None
+
+        if req.mode is ContextMode.CLIENT_SIDE:
+            # History ships with the request; tokenize all of it, every time.
+            t0 = time.perf_counter()
+            full: List[int] = []
+            for role, content in req.client_history or []:
+                full.extend(encode_turn(tok, role, content))
+            full.extend(encode_turn(tok, "user", req.prompt))
+            full.extend(assistant_header(tok))
+            timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
+            prompt_ids = full
+        else:
+            # Edge-side context: consistency-checked read from local replica.
+            try:
+                rr = self._read_context(key, req.turn, req.policy)
+            except StaleContextError as e:
+                return Response(
+                    text="", user_id=user_id, session_id=session_id,
+                    turn=req.turn, served_by=self.node_id,
+                    n_prompt_tokens=0, n_context_tokens=0, n_generated_tokens=0,
+                    timing=timing, error=str(e),
+                )
+            timing.context_read_ms = rr.wait_ms
+            timing.retries = rr.retries
+            stale = rr.stale
+
+            if req.mode is ContextMode.TOKENIZED:
+                stored_tok = (
+                    rr.value.value.copy() if rr.value is not None
+                    else TokenizedContext(model=req.model)
+                )
+                context_ids = list(stored_tok.ids)
+                t0 = time.perf_counter()
+                prompt_ids = encode_turn(tok, "user", req.prompt)
+                prompt_ids.extend(assistant_header(tok))
+                timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
+            else:  # RAW: re-render + re-tokenize the whole history
+                stored_raw = (
+                    rr.value.value.copy() if rr.value is not None
+                    else RawContext(model=req.model)
+                )
+                t0 = time.perf_counter()
+                ctx_ids = tok.encode(stored_raw.text)
+                new_ids = encode_turn(tok, "user", req.prompt)
+                new_ids.extend(assistant_header(tok))
+                timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
+                # raw mode sends everything as one prompt (context param empty)
+                prompt_ids = ctx_ids + new_ids
+                context_ids = []
+
+        # Clock discipline: tokenize + read time pass on the sim clock.
+        net.advance(timing.tokenize_ms)
+
+        result = self.service.completion(
+            context_ids=context_ids,
+            prompt_ids=prompt_ids,
+            max_new_tokens=req.max_new_tokens,
+        )
+        timing.inference_ms = result.inference_ms
+        net.advance(result.inference_ms)
+
+        n_ctx = len(context_ids) if req.mode is ContextMode.TOKENIZED else 0
+        resp = Response(
+            text=result.text,
+            user_id=user_id,
+            session_id=session_id,
+            turn=req.turn + 1,
+            served_by=self.node_id,
+            n_prompt_tokens=len(prompt_ids),
+            n_context_tokens=n_ctx,
+            n_generated_tokens=len(result.token_ids),
+            timing=timing,
+            stale=stale,
+        )
+
+        # Asynchronous context update — after the response, off the hot path.
+        if req.mode is not ContextMode.CLIENT_SIDE:
+            t0 = time.perf_counter()
+            if req.mode is ContextMode.TOKENIZED:
+                assert stored_tok is not None
+                stored_tok.extend(encode_turn(tok, "user", req.prompt))
+                stored_tok.extend(assistant_header(tok))
+                stored_tok.extend(result.token_ids)  # already tokens — free
+                stored_tok.commit_turn()
+                new_value: object = stored_tok
+                version = stored_tok.turn
+            else:
+                assert stored_raw is not None
+                stored_raw.extend(render_turn("user", req.prompt))
+                stored_raw.extend(render_turn("assistant", result.text))
+                stored_raw.commit_turn()
+                new_value = stored_raw
+                version = stored_raw.turn
+            timing.async_update_ms = (time.perf_counter() - t0) * 1e3
+            # local write + async replication to keygroup peers
+            self.store.put(self.node_id, self.keygroup, key, new_value, version)
+        return resp
+
+    # ---------------------------------------------------------------
+    def _read_context(
+        self, key: str, required_turn: int, policy: ConsistencyPolicy
+    ) -> ReadResult:
+        return read_with_turn_check(
+            self.store,
+            self.node_id,
+            self.keygroup,
+            key,
+            required_turn,
+            policy=policy,
+            retry=self.retry,
+        )
+
+    def forget(self, user_id: str, session_id: str) -> None:
+        """Client-requested context deletion (paper §3.3)."""
+        self.store.delete(self.node_id, self.keygroup, context_key(user_id, session_id))

@@ -1,0 +1,108 @@
+"""Wire protocol between LLM clients, the Context Manager, and the LLM
+Service (paper §3.1/§3.4).
+
+Clients use the same request format as a centralized LLM service plus a
+(user_id, session_id) pair — assignable by the Context Manager on first
+contact — and a monotone *turn counter* that drives the consistency protocol.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+class ContextMode(enum.Enum):
+    """The three context-management modes evaluated in the paper (§4.1)."""
+
+    RAW = "raw"              # server stores raw text; re-tokenizes everything
+    TOKENIZED = "tokenized"  # server stores token ids; tokenizes only new prompt
+    CLIENT_SIDE = "client_side"  # client ships full history each request
+
+
+class ConsistencyPolicy(enum.Enum):
+    """Paper §3.3: the consistency/availability trade-off is a client policy."""
+
+    STRONG = "strong"        # default: fail the request if context is stale
+    AVAILABLE = "available"  # proceed with possibly-stale context
+
+
+@dataclass
+class Request:
+    prompt: str
+    model: str
+    user_id: Optional[str] = None
+    session_id: Optional[str] = None
+    turn: int = 0            # client-maintained turn counter (paper §3.4)
+    mode: ContextMode = ContextMode.TOKENIZED
+    policy: ConsistencyPolicy = ConsistencyPolicy.STRONG
+    max_new_tokens: int = 128
+    # CLIENT_SIDE mode only: the full prior history, shipped with the request.
+    client_history: Optional[List[Tuple[str, str]]] = None
+
+    def wire_bytes(self) -> int:
+        """Client→server request size (paper Fig. 7 metric)."""
+        n = len(self.prompt.encode("utf-8")) + 64  # headers/ids/counter
+        if self.mode is ContextMode.CLIENT_SIDE and self.client_history:
+            n += sum(
+                len(r.encode("utf-8")) + len(c.encode("utf-8")) + 8
+                for r, c in self.client_history
+            )
+        return n
+
+
+@dataclass
+class Timing:
+    """Per-request latency decomposition (ms). network_* are simulated; the
+    tokenize/inference components are measured wall time of real work."""
+
+    network_up_ms: float = 0.0
+    tokenize_ms: float = 0.0
+    context_read_ms: float = 0.0   # includes retry backoff (10 ms each)
+    inference_ms: float = 0.0
+    network_down_ms: float = 0.0
+    async_update_ms: float = 0.0   # context write; NOT on the response path
+    retries: int = 0
+
+    @property
+    def response_time_ms(self) -> float:
+        """Client-observable end-to-end response time (paper Figs. 3/6).
+        The async context update is excluded by design (paper §4.2.1)."""
+        return (
+            self.network_up_ms
+            + self.tokenize_ms
+            + self.context_read_ms
+            + self.inference_ms
+            + self.network_down_ms
+        )
+
+
+@dataclass
+class Response:
+    text: str
+    user_id: str
+    session_id: str
+    turn: int
+    served_by: str
+    n_prompt_tokens: int
+    n_context_tokens: int
+    n_generated_tokens: int
+    timing: Timing = field(default_factory=Timing)
+    stale: bool = False   # AVAILABLE policy served stale context
+    error: Optional[str] = None
+
+    def wire_bytes(self) -> int:
+        return len(self.text.encode("utf-8")) + 96
+
+    @property
+    def tps(self) -> float:
+        """Tokens generated per second (paper Fig. 4 metric)."""
+        if self.timing.inference_ms <= 0:
+            return 0.0
+        return self.n_generated_tokens / (self.timing.inference_ms / 1e3)
+
+
+class StaleContextError(RuntimeError):
+    """STRONG policy: replica did not catch up to the client's turn counter
+    within the retry budget (paper §3.3 — node notifies the client)."""

@@ -1,0 +1,3 @@
+from .synthetic import BatchIterator, synthetic_session, token_stream
+
+__all__ = ["BatchIterator", "synthetic_session", "token_stream"]

@@ -1,0 +1,14 @@
+from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
+from .client import CLIENT_HOST, LLMClient
+from .node import EdgeNode
+from .service import EchoLLMService
+
+__all__ = [
+    "CLIENT_DOWN_TAG",
+    "CLIENT_UP_TAG",
+    "EdgeCluster",
+    "CLIENT_HOST",
+    "LLMClient",
+    "EdgeNode",
+    "EchoLLMService",
+]

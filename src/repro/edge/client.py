@@ -1,0 +1,76 @@
+"""LLM client (paper §3.4): standard request format + user/session ids +
+the turn counter. The client picks its edge node per request (geo-aware
+routing is out of scope — the mobility benchmarks select nodes explicitly,
+like the paper's turn-3/5/7 switches)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from ..core.protocol import (
+    ConsistencyPolicy,
+    ContextMode,
+    Request,
+    Response,
+)
+from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
+
+CLIENT_HOST = "client"
+
+
+@dataclass
+class LLMClient:
+    cluster: EdgeCluster
+    model: str
+    mode: ContextMode = ContextMode.TOKENIZED
+    policy: ConsistencyPolicy = ConsistencyPolicy.STRONG
+    max_new_tokens: int = 128
+    user_id: Optional[str] = None
+    session_id: Optional[str] = None
+    turn: int = 0
+    # client-side mode keeps the full history locally and ships it each turn
+    history: List[Tuple[str, str]] = field(default_factory=list)
+    request_bytes_log: List[int] = field(default_factory=list)
+    response_log: List[Response] = field(default_factory=list)
+
+    def chat(self, prompt: str, node_id: str) -> Response:
+        net = self.cluster.network
+        req = Request(
+            prompt=prompt,
+            model=self.model,
+            user_id=self.user_id,
+            session_id=self.session_id,
+            turn=self.turn,
+            mode=self.mode,
+            policy=self.policy,
+            max_new_tokens=self.max_new_tokens,
+            client_history=list(self.history) if self.mode is ContextMode.CLIENT_SIDE else None,
+        )
+        up_bytes = req.wire_bytes()
+        self.request_bytes_log.append(up_bytes)
+
+        up_ms = net.send(CLIENT_HOST, node_id, up_bytes, CLIENT_UP_TAG)
+        net.advance(up_ms)
+
+        resp = self.cluster.node(node_id).handle(req)
+
+        down_ms = net.send(node_id, CLIENT_HOST, resp.wire_bytes(), CLIENT_DOWN_TAG)
+        net.advance(down_ms)
+        resp.timing.network_up_ms = up_ms
+        resp.timing.network_down_ms = down_ms
+
+        if resp.error is None:
+            # adopt server-assigned identifiers; bump the turn counter
+            self.user_id = resp.user_id
+            self.session_id = resp.session_id
+            self.turn = resp.turn
+            if self.mode is ContextMode.CLIENT_SIDE:
+                self.history.append(("user", prompt))
+                self.history.append(("assistant", resp.text))
+        self.response_log.append(resp)
+        return resp
+
+    def think(self, ms: float) -> None:
+        """Client think time between turns — lets replication land."""
+        self.cluster.network.advance(ms)

@@ -1,0 +1,79 @@
+"""Edge cluster wiring: nodes + network + distributed store + keygroups."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from ..core.consistency import RetryPolicy
+from ..core.manager import LLMServiceProtocol
+from ..core.tokens import RawContext, TokenizedContext
+from ..store.distributed import DistributedKVStore
+from ..store.network import Link, Network
+from .node import EdgeNode
+
+CLIENT_UP_TAG = "client-up"
+CLIENT_DOWN_TAG = "client-down"
+
+
+@dataclass
+class EdgeCluster:
+    network: Network
+    store: DistributedKVStore
+    nodes: Dict[str, EdgeNode] = field(default_factory=dict)
+
+    @classmethod
+    def build(
+        cls,
+        node_ids: List[str],
+        service_factory: Callable[[str], LLMServiceProtocol],
+        *,
+        inter_node_link: Optional[Link] = None,
+        client_link: Optional[Link] = None,
+        replication: str = "full",
+        retry: Optional[RetryPolicy] = None,
+        context_ttl_ms: Optional[float] = None,
+    ) -> "EdgeCluster":
+        """Build a cluster where every node serves the same model — one
+        keygroup per model, membership = nodes serving it (paper §3.3)."""
+        net = Network(default_link=inter_node_link or Link(latency_ms=1.0, bandwidth_mbps=1000.0))
+        if client_link is not None:
+            for nid in node_ids:
+                net.set_link("client", nid, client_link)
+        store = DistributedKVStore(net, replication=replication)
+        cluster = cls(network=net, store=store)
+
+        services = {nid: service_factory(nid) for nid in node_ids}
+        # group nodes by model -> keygroups
+        by_model: Dict[str, List[str]] = {}
+        for nid, svc in services.items():
+            by_model.setdefault(svc.model, []).append(nid)
+        for model, members in by_model.items():
+            tok = services[members[0]].tokenizer
+            store.create_keygroup(
+                model,
+                members,
+                size_fn=lambda v, _tok=tok: v.wire_bytes(_tok),
+                delta_size_fn=lambda v, since, _tok=tok: (
+                    v.delta_wire_bytes(_tok, since)
+                    if isinstance(v, TokenizedContext)
+                    else v.wire_bytes(_tok)
+                ),
+                ttl_ms=context_ttl_ms,
+            )
+        for nid in node_ids:
+            cluster.nodes[nid] = EdgeNode.create(nid, store, services[nid], retry=retry)
+        return cluster
+
+    def node(self, node_id: str) -> EdgeNode:
+        return self.nodes[node_id]
+
+    def sync_bytes(self) -> int:
+        return self.store.sync_bytes()
+
+    def client_bytes_up(self) -> int:
+        return self.network.bytes_for_tag(CLIENT_UP_TAG)
+
+    def converge(self) -> None:
+        """Drain in-flight replication (end-of-experiment barrier)."""
+        self.network.run_until_quiet()

@@ -1,0 +1,37 @@
+"""Edge node: Context Manager + LLM Service + local KV replica (paper Fig. 1)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from ..core.consistency import RetryPolicy
+from ..core.manager import ContextManager, LLMServiceProtocol
+from ..core.protocol import Request, Response
+from ..store.distributed import DistributedKVStore
+
+
+@dataclass
+class EdgeNode:
+    node_id: str
+    manager: ContextManager
+    service: LLMServiceProtocol
+
+    @classmethod
+    def create(
+        cls,
+        node_id: str,
+        store: DistributedKVStore,
+        service: LLMServiceProtocol,
+        retry: Optional[RetryPolicy] = None,
+    ) -> "EdgeNode":
+        mgr = ContextManager(
+            node_id=node_id,
+            store=store,
+            service=service,
+            retry=retry or RetryPolicy(),
+        )
+        return cls(node_id=node_id, manager=mgr, service=service)
+
+    def handle(self, req: Request) -> Response:
+        return self.manager.handle(req)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+DisCEdge's hot path is tokenize→prefill→decode; tokenization is host-side
+(measured in wall time like the paper), while prefill/decode attention and
+the Mamba2 SSD scan are the device hot spots — these get kernels.
+
+Each kernel ships three artifacts (per the repo convention):
+- ``kernel.py`` — pl.pallas_call + explicit BlockSpec VMEM tiling;
+- ``ops.py``    — the jit'd public wrapper (padding, dtype, dispatch);
+- ``ref.py``    — pure-jnp oracle the kernel is validated against
+                  (interpret=True on CPU; Mosaic on TPU).
+
+Kernels: flash_attention (prefill), decode_attention (flash-decode),
+ssd (Mamba2 intra-chunk state-space dual).
+"""

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for flash-decode: reshapes GQA heads, pads KV length."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "block_k", "interpret")
+)
+def decode_attention(
+    q, k, v, q_pos, kv_pos, kv_valid,
+    *, window: int = 0, softcap: float = 0.0,
+    block_k: int = 512, interpret: bool = None,
+):
+    """q (B,1,H,Dh) vs cache (B,T,KV,Dh) -> (B,1,H,Dh)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, _, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bk = min(block_k, max(8, t))
+    rem = (-t) % bk
+    if rem:
+        pads3 = [(0, 0), (0, rem), (0, 0), (0, 0)]
+        k = jnp.pad(k, pads3)
+        v = jnp.pad(v, pads3)
+        kv_pos = jnp.pad(kv_pos, [(0, 0), (0, rem)], constant_values=2**30)
+        kv_valid = jnp.pad(kv_valid.astype(jnp.int32), [(0, 0), (0, rem)])
+    qr = q.reshape(b, 1, kvh, g, dh)[:, 0]          # (B, KV, G, Dh)
+    out = decode_attention_pallas(
+        qr, k, v, q_pos, kv_pos, kv_valid,
+        window=window, softcap=softcap, block_k=bk, interpret=interpret,
+    )
+    return out.reshape(b, 1, h, dh)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash-decode: exact masked softmax of one query
+position against the whole cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..flash_attention.ref import flash_attention_ref
+
+
+def decode_attention_ref(
+    q,          # (B, 1, H, Dh)
+    k, v,       # (B, T, KV, Dh)
+    q_pos,      # (B, 1)
+    kv_pos,     # (B, T)
+    kv_valid,   # (B, T)
+    *, window: int = 0, softcap: float = 0.0,
+):
+    return flash_attention_ref(
+        q, k, v, q_pos, kv_pos, kv_valid, window=window, softcap=softcap
+    )

@@ -1,0 +1,133 @@
+"""Blockwise causal flash attention (prefill/training) — Pallas TPU kernel.
+
+TPU adaptation of FlashAttention: the online-softmax accumulator lives in
+VMEM scratch that persists across the innermost (KV) grid dimension — TPU
+grids execute sequentially, so the scratch carries (m, l, acc) the way a CUDA
+implementation carries them in registers/SMEM. Block shapes are MXU-aligned
+(q/kv blocks of 128 × head_dim) and all masking is position-based so the same
+kernel serves full-causal, sliding-window, and padded sequences.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks) — KV innermost.
+GQA is handled in the index maps: the KV block for query head h comes from
+kv head h // group_size, so no K/V replication is materialized in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    qpos_ref, kvpos_ref, valid_ref,       # positions / validity blocks
+    q_ref, k_ref, v_ref,                   # tensor blocks
+    o_ref,                                  # output block
+    acc_ref, m_ref, l_ref,                  # VMEM scratch (persist over ik)
+    *, nk: int, window: int, softcap: float, scale: float,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)     # (BQ, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)     # (BK, Dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (BK, Dh)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (BQ, BK)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qp = qpos_ref[0, :]                            # (BQ,)
+    kp = kvpos_ref[0, :]                           # (BK,)
+    ok = valid_ref[0, :]
+    mask = (kp[None, :] <= qp[:, None]) & (ok[None, :] != 0)
+    if window > 0:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]                            # (BQ, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                    # (BQ, BK)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)            # fully-masked rows -> 0
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,        # (B, S, H, Dh)
+    k: jnp.ndarray,        # (B, T, KV, Dh)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,    # (B, S) int32
+    kv_pos: jnp.ndarray,   # (B, T) int32
+    kv_valid: jnp.ndarray, # (B, T) bool/int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    nq, nk = s // block_q, t // block_k
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (b, h, nq, nk)
+    kern = functools.partial(
+        _flash_kernel, nk=nk, window=window, softcap=softcap, scale=scale
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, hi, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, qi, ki: (bi, ki)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, qi, ki: (bi, ki)),
+            pl.BlockSpec(
+                (1, block_q, 1, dh), lambda bi, hi, qi, ki: (bi, qi, hi, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, dh), lambda bi, hi, qi, ki, _g=g: (bi, ki, hi // _g, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, dh), lambda bi, hi, qi, ki, _g=g: (bi, ki, hi // _g, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, dh), lambda bi, hi, qi, ki: (bi, qi, hi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32),
+      kv_valid.astype(jnp.int32), q, k, v)

@@ -1,0 +1,58 @@
+"""Jit'd public wrapper: pads to block multiples, dispatches kernel vs ref.
+
+On CPU (this container) the kernel executes in interpret mode; on TPU it
+compiles to Mosaic. `interpret` auto-detects unless forced.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, q_pos, kv_pos, kv_valid,
+    *, window: int = 0, softcap: float = 0.0,
+    block_q: int = 128, block_k: int = 128,
+    interpret: bool = None,
+):
+    """(B,S,H,Dh) x (B,T,KV,Dh) -> (B,S,H,Dh), causal + window masked."""
+    if interpret is None:
+        interpret = _on_cpu()
+    s0, t0 = q.shape[1], k.shape[1]
+    bq = min(block_q, max(8, s0))
+    bk = min(block_k, max(8, t0))
+    qp = _pad_axis(q_pos, 1, bq, value=0)
+    q_ = _pad_axis(q, 1, bq)
+    kp = _pad_axis(kv_pos, 1, bk, value=2**30)   # padded kv: future -> masked
+    kv_ = _pad_axis(kv_valid.astype(jnp.int32), 1, bk, value=0)
+    k_ = _pad_axis(k, 1, bk)
+    v_ = _pad_axis(v, 1, bk)
+    out = flash_attention_pallas(
+        q_, k_, v_, qp, kp, kv_,
+        window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :s0]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel (no blocking, exact
+masked softmax). The kernel must match this to ~1e-5 in f32."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,        # (B, S, H, Dh)
+    k: jnp.ndarray,        # (B, T, KV, Dh)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,    # (B, S)
+    kv_pos: jnp.ndarray,   # (B, T)
+    kv_valid: jnp.ndarray, # (B, T)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qq = q.reshape(b, s, kvh, g, dh).astype(jnp.float32)
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qq, k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = (kv_pos[:, None, :] <= q_pos[:, :, None]) & (kv_valid[:, None, :] != 0)
+    if window > 0:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkgst,btkd->bskgd", p / l, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)

@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import ssd_chunk_pallas
+from .ops import ssd
+from .ref import ssd_ref, ssd_sequential
+
+__all__ = ["ops", "ref", "ssd", "ssd_chunk_pallas", "ssd_ref", "ssd_sequential"]

@@ -1,0 +1,116 @@
+"""Mamba2 SSD intra-chunk kernel (Pallas TPU).
+
+The SSD decomposition splits the selective-scan into (a) a quadratic
+attention-like computation *within* each chunk and (b) a linear recurrence
+*across* chunk states. (a) is the FLOP hot spot and maps onto the MXU as
+three small matmuls per (batch, chunk, head):
+
+    CB       = C @ Bᵀ                  (Q×Q)
+    y_intra  = (CB ⊙ L ⊙ dt) @ x       (Q×P)
+    state    = (decay_end·dt·B)ᵀ @ x   (N×P)
+
+where L is the segment-sum decay matrix. This kernel computes (a); the
+inter-chunk recurrence (b) — a tiny (H,P,N) state chain — stays in jnp
+(ops.py) where lax.scan handles it at negligible cost.
+
+This is the TPU-idiomatic port of the CUDA Mamba2 kernel's warp-level scan:
+on TPU the chunked matmul formulation IS the fast path (MXU), so nothing is
+emulated. Grid: (batch, n_chunks, heads); one grid cell owns one (Q,P) tile
+— Q=chunk (64/128) and P=head_dim (64) are VMEM- and MXU-friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    x_ref,      # (1, Q, 1, P)
+    dt_ref,     # (1, Q, 1)
+    a_ref,      # (1,)      A for this head
+    b_ref,      # (1, Q, N)
+    c_ref,      # (1, Q, N)
+    y_ref,      # (1, Q, 1, P)  out: intra-chunk y
+    s_ref,      # (1, 1, N, P)  out: chunk state contribution
+    dcs_ref,    # (1, Q, 1)     out: cumulative dA (for inter-chunk combine)
+):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0].astype(jnp.float32)                   # scalar
+    bv = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    cv = c_ref[0].astype(jnp.float32)                  # (Q, N)
+    q = x.shape[0]
+
+    dA = dt * a                                         # (Q,)
+    dA_cs = jnp.cumsum(dA)                              # inclusive
+    seg = dA_cs[:, None] - dA_cs[None, :]               # (Q, Q) i,j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = ii >= jj
+    seg = jnp.where(causal, seg, 0.0)   # clamp before exp (overflow safety)
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(
+        cv, bv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (Q, Q)
+    w = cb * L * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (Q, P)
+
+    decay_end = jnp.exp(dA_cs[-1] - dA_cs)              # (Q,)
+    bw = bv * (decay_end * dt)[:, None]                 # (Q, N)
+    state = jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (N, P)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    s_ref[0, 0, :, :] = state.astype(s_ref.dtype)
+    dcs_ref[0, :, 0] = dA_cs.astype(dcs_ref.dtype)
+
+
+def ssd_chunk_pallas(
+    x: jnp.ndarray,     # (B, L, H, P)
+    dt: jnp.ndarray,    # (B, L, H) — post-softplus
+    A: jnp.ndarray,     # (H,)
+    Bv: jnp.ndarray,    # (B, L, N)  (groups squeezed)
+    Cv: jnp.ndarray,    # (B, L, N)
+    chunk: int,
+    *,
+    interpret: bool = False,
+):
+    """Returns (y_intra (B,L,H,P), states (B,NC,H,N,P), dA_cs (B,L,H))."""
+    b, l, h, p = x.shape
+    n = Bv.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    grid = (b, nc, h)
+    kern = _ssd_chunk_kernel
+    y, s, dcs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, ci, hi: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci, hi: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, ci, hi: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, ci, hi: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, ci, hi: (bi, ci * h + hi, 0, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, ci, hi: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc * h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, l, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bv, Cv)
+    return y, s.reshape(b, nc, h, n, p), dcs

@@ -1,0 +1,75 @@
+"""Jit'd SSD wrapper: Pallas intra-chunk kernel + jnp inter-chunk scan."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jnp.ndarray,    # (B,L,H,P)
+    dt: jnp.ndarray,   # (B,L,H)
+    A: jnp.ndarray,    # (H,)
+    Bv: jnp.ndarray,   # (B,L,G,N)
+    Cv: jnp.ndarray,   # (B,L,G,N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,
+    *,
+    interpret: bool = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full SSD: kernel for intra-chunk, lax.scan for the state chain.
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, l, h, p = x.shape
+    n = Bv.shape[-1]
+    nc = l // chunk
+
+    y_intra, states, dA_cs = ssd_chunk_pallas(
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        A.astype(jnp.float32),
+        Bv[:, :, 0].astype(jnp.float32),
+        Cv[:, :, 0].astype(jnp.float32),
+        chunk,
+        interpret=interpret,
+    )
+    # states: (B,NC,H,N,P) contribution of each chunk; chain them
+    dA_c = dA_cs.reshape(b, nc, chunk, h)
+    chunk_decay = jnp.exp(dA_c[:, :, -1, :])                   # (B,NC,H)
+    init = (
+        h0.astype(jnp.float32).transpose(0, 1, 3, 2)           # (B,H,N,P)
+        if h0 is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+
+    def step(carry, inp):
+        s_c, dec = inp
+        new = carry * dec[:, :, None, None] + s_c
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev = jnp.moveaxis(prev, 0, 1)                             # (B,NC,H,N,P)
+
+    # inter-chunk contribution: C_i · h_prev · exp(dA_cs_i)
+    Cc = Cv[:, :, 0].reshape(b, nc, chunk, n).astype(jnp.float32)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, prev, jnp.exp(dA_c))
+    y = y_intra.reshape(b, nc, chunk, h, p) + y_inter
+    return (
+        y.reshape(b, l, h, p).astype(x.dtype),
+        final.transpose(0, 1, 3, 2).astype(x.dtype),            # (B,H,P,N)
+    )

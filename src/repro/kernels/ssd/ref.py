@@ -1,0 +1,52 @@
+"""Oracles for the SSD kernel.
+
+- ``ssd_ref``        — chunked reference (mirrors models/ssm.ssd_reference).
+- ``ssd_sequential`` — the O(L·N·P) exact recurrence; ground truth for both
+  the chunked reference and the kernel (hypothesis property tests sweep
+  chunk sizes against this).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_reference
+
+ssd_ref = ssd_reference
+
+
+def ssd_sequential(
+    x: jnp.ndarray,    # (B,L,H,P)
+    dt: jnp.ndarray,   # (B,L,H)
+    A: jnp.ndarray,    # (H,)
+    Bv: jnp.ndarray,   # (B,L,G,N)
+    Cv: jnp.ndarray,   # (B,L,G,N)
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-by-token exact recurrence: h_t = h_{t-1}·exp(dt·A) + dt·B⊗x."""
+    b, l, h, p = x.shape
+    n = Bv.shape[-1]
+    f32 = jnp.float32
+    state = h0.astype(f32) if h0 is not None else jnp.zeros((b, h, p, n), f32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A)                    # (b,h)
+        state = (
+            state * decay[:, :, None, None]
+            + dtt[:, :, None, None] * xt[:, :, :, None] * bt[:, None, None, :]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(Bv[:, :, 0].astype(f32), 1, 0),
+        jnp.moveaxis(Cv[:, :, 0].astype(f32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final.astype(x.dtype)

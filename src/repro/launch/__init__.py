@@ -1,0 +1,15 @@
+"""Launchers: mesh definitions, sharding rules, the multi-pod dry-run, and
+train/serve CLIs. NOTE: dryrun must be invoked as its own process
+(python -m repro.launch.dryrun) — it forces 512 host devices via XLA_FLAGS
+before jax initializes."""
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16, data_axes, make_production_mesh, n_chips
+
+__all__ = [
+    "HBM_BW",
+    "ICI_BW_PER_LINK",
+    "PEAK_FLOPS_BF16",
+    "data_axes",
+    "make_production_mesh",
+    "n_chips",
+]

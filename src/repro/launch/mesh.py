@@ -1,0 +1,36 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
+maps DisCEdge's geo-distributed edge sites; context/KV migration moves
+across it (repro.core.mesh_context).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; dryrun.py sets XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW_PER_LINK = 50e9         # B/s per link (~ one direction)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool) -> Tuple[str, ...]:
+    """Axes that jointly shard the batch dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_chips(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,72 @@
+"""Serving launcher: bring up a DisCEdge cluster and run a scripted or
+interactive session against it.
+
+    PYTHONPATH=src python -m repro.launch.serve --nodes 3 --turns 6
+    PYTHONPATH=src python -m repro.launch.serve --mode raw --roam
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b  # reduced real model
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--turns", type=int, default=6)
+    ap.add_argument("--mode", default="tokenized",
+                    choices=["tokenized", "raw", "client_side"])
+    ap.add_argument("--roam", action="store_true",
+                    help="switch nodes every other turn")
+    ap.add_argument("--arch", default=None,
+                    help="serve a reduced real model instead of the echo service")
+    ap.add_argument("--replication", default="full", choices=["full", "delta"])
+    args = ap.parse_args()
+
+    from ..core import ContextMode
+    from ..data.synthetic import synthetic_session
+    from ..edge import EchoLLMService, EdgeCluster, LLMClient
+    from ..store import Link
+
+    import numpy as np
+
+    if args.arch:
+        from ..configs import get_config
+        from ..serving import JaxLLMService
+
+        cfg = get_config(args.arch).reduced()
+        svc = JaxLLMService.create(cfg.name, cfg, max_len=2048)
+        factory = lambda nid: svc
+        model = cfg.name
+    else:
+        model = "echo-qwen"
+        factory = lambda nid: EchoLLMService(model=model)
+
+    node_ids = [f"edge-{i}" for i in range(args.nodes)]
+    cluster = EdgeCluster.build(
+        node_ids, factory,
+        inter_node_link=Link(latency_ms=3.0, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=8.0, bandwidth_mbps=20.0),
+        replication=args.replication,
+    )
+    client = LLMClient(cluster, model=model, mode=ContextMode(args.mode),
+                       max_new_tokens=16)
+
+    rng = np.random.default_rng(0)
+    turns = synthetic_session(rng, n_turns=args.turns)
+    prompts = [c for r, c in turns if r == "user"][: args.turns]
+    print(f"{'node':8s} {'turn':4s} {'ctx':5s} {'rt_ms':8s}")
+    for i, p in enumerate(prompts):
+        node = node_ids[(i // 2) % len(node_ids)] if args.roam else node_ids[0]
+        r = client.chat(p, node)
+        assert r.error is None, r.error
+        print(f"{node:8s} {r.turn:<4d} {r.n_context_tokens:<5d} "
+              f"{r.timing.response_time_ms:<8.1f}")
+        client.think(400)
+    cluster.converge()
+    print(f"\nsync={cluster.sync_bytes()}B uplink={sum(client.request_bytes_log)}B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""The four assigned input shapes and their abstract input specs."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import make_decode_caches
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# archs that run long_500k natively (sub-quadratic state); all others use the
+# documented sliding-window variant (DESIGN.md §5)
+NATIVE_LONG = {"mamba2-1.3b", "zamba2-7b", "gemma2-27b"}
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Variant selection: long_500k forces the sliding-window variant for
+    pure full-attention archs."""
+    if shape.name == "long_500k" and cfg.name not in NATIVE_LONG and not cfg.is_attention_free:
+        return cfg.replace(attn_variant="sliding_window", sliding_window=8192)
+    return cfg
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_abstract(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s)
+    batch = {"tokens": sds(tok_shape, "int32"), "labels": sds(tok_shape, "int32")}
+    if cfg.n_patches:
+        batch["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def prefill_inputs_abstract(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s)
+    out = {"tokens": sds(tok_shape, "int32")}
+    if cfg.n_patches:
+        out["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def decode_cache_abstract(cfg: ModelConfig, shape: InputShape) -> Any:
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: make_decode_caches(cfg, b, s))
+
+
+def decode_inputs_abstract(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b = shape.global_batch
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, 1)
+    return {"tokens": sds(tok_shape, "int32"), "pos": sds((b,), "int32")}

@@ -1,0 +1,214 @@
+"""PartitionSpec rules for every parameter/cache/input in the system.
+
+Strategy (Megatron-style TP on ``model``, DP on ``data`` (+``pod``)):
+
+- attention: head (column) dim of wq/wk/wv over ``model``; row dim of wo;
+- MLP: d_ff over ``model`` (column-parallel up/gate, row-parallel down);
+- MoE: expert dim over ``model`` when divisible (expert parallelism),
+  else fall back to d_ff sharding (granite's 40 experts on 16-way model);
+- embeddings: vocab over ``model`` when divisible, else d_model;
+- Mamba2: d_inner/heads over ``model``;
+- batch dims over (``pod``,) + ``data``;
+- decode KV caches: batch over data; kv-head dim over ``model`` when
+  divisible, else the *slot* (T) dim over ``model`` (flash-decode style);
+  long_500k (batch=1) shards slots over data(+pod) instead of batch.
+
+Rules are applied by leaf *path name*, then left-padded with None to match
+the leaf rank (group stacking prepends layer dims).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.pjit_rules import attention_weights_replicated
+from ..models.transformer import layer_groups
+
+
+def _divisible(n: int, k: int) -> bool:
+    return n > 0 and n % k == 0
+
+
+def _pad(spec: Tuple, ndim: int) -> P:
+    assert len(spec) <= ndim, (spec, ndim)
+    return P(*((None,) * (ndim - len(spec)) + tuple(spec)))
+
+
+def _shard_first_free_dim(spec_leaf: P, arr, axis: str = "data") -> P:
+    """Add `axis` on an unsharded dim divisible by 16 (ZeRO/FSDP).
+
+    Dim 0 is tried LAST: layer-stacked parameters are dynamic-sliced along
+    dim 0 by the layer scan, and a sharded dim 0 forces XLA to keep fully
+    gathered gradient/optimizer buffers across the backward scan (measured:
+    30 GiB f32 stacks on nemotron-340B). Sharding an inner dim keeps the
+    scan slicing local and the accumulators sharded."""
+    if arr.ndim == 0:
+        return spec_leaf
+    parts = list(spec_leaf)
+    parts += [None] * (arr.ndim - len(parts))
+    order = list(range(1, arr.ndim)) + [0] if arr.ndim > 1 else [0]
+    for i in order:
+        if parts[i] is None and arr.shape[i] % 16 == 0:
+            parts[i] = axis
+            return P(*parts)
+    return spec_leaf
+
+
+def fsdp_param_specs(cfg: ModelConfig, abstract: Any, model_size: int = 16) -> Any:
+    """FSDP: parameters additionally sharded over ``data`` — required for
+    the 132B/340B configs whose TP-only shards exceed one chip's HBM.
+    GSPMD inserts the per-layer all-gathers automatically."""
+    base = param_specs(cfg, abstract, model_size)
+    return jax.tree.map(_shard_first_free_dim, base, abstract)
+
+
+def param_specs(cfg: ModelConfig, abstract: Any, model_size: int = 16) -> Any:
+    """PartitionSpec pytree matching abstract_params(cfg)."""
+    shard_vocab = _divisible(cfg.vocab_size, model_size)
+    # head counts that don't divide the model axis: attention weights are
+    # replicated; attention runs context-parallel (pjit_rules)
+    attn_replicated = attention_weights_replicated(cfg, model_size)
+
+    def rule(path, leaf) -> P:
+        names = [getattr(p, "key", None) for p in path]
+        name = names[-1]
+        nd = leaf.ndim
+
+        if name == "tok":
+            return _pad(("model", None) if shard_vocab else (None, "model"), nd)
+        if name == "lm_head":
+            return _pad((None, "model") if shard_vocab else ("model", None), nd)
+        if name in ("final_norm", "norm", "norm1", "norm2", "gate_norm"):
+            return _pad((), nd)
+        kv_replicated = attn_replicated or not _divisible(cfg.n_kv_heads, model_size)
+        if name == "wq":
+            return _pad((), nd) if attn_replicated else _pad((None, "model"), nd)
+        if name in ("wk", "wv"):
+            # kv heads that can't shard are computed replicated (they're
+            # small under GQA) — avoids sub-head resharding
+            return _pad((), nd) if kv_replicated else _pad((None, "model"), nd)
+        if name == "bq":
+            return _pad((), nd) if attn_replicated else _pad(("model",), nd)
+        if name in ("bk", "bv"):
+            return _pad((), nd) if kv_replicated else _pad(("model",), nd)
+        if name == "wo":
+            return _pad((), nd) if attn_replicated else _pad(("model", None), nd)
+        if name in ("w_up", "w_gate"):
+            if "moe" in names:
+                if _divisible(cfg.n_experts, model_size):
+                    return _pad(("model", None, None), nd)
+                return _pad((None, None, "model"), nd)
+            return _pad((None, "model"), nd)
+        if name == "w_down":
+            if "moe" in names:
+                if _divisible(cfg.n_experts, model_size):
+                    return _pad(("model", None, None), nd)
+                return _pad((None, "model", None), nd)
+            return _pad(("model", None), nd)
+        if name == "router":
+            return _pad((), nd)
+        if name == "in_proj":
+            return _pad((None, "model"), nd)
+        if name == "conv_w":
+            return _pad((None, "model"), nd)
+        if name == "conv_b":
+            return _pad(("model",), nd)
+        if name in ("A_log", "D", "dt_bias"):
+            return _pad(("model",), nd) if _divisible(cfg.n_ssm_heads, model_size) else _pad((), nd)
+        if name == "out_proj":
+            return _pad(("model", None), nd)
+        return _pad((), nd)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+def opt_state_specs(cfg: ModelConfig, abstract_opt: Any, model_size: int = 16,
+                    zero1: bool = False) -> Any:
+    """Moments inherit parameter specs; with zero1, the leading (layer-stack)
+    dim is additionally sharded over ``data`` when divisible."""
+    pspecs = param_specs(cfg, abstract_opt["m"], model_size)
+
+    def maybe_zero(spec_leaf, arr):
+        if not zero1:
+            return spec_leaf
+        return _shard_first_free_dim(spec_leaf, arr)
+
+    m_specs = (
+        jax.tree.map(maybe_zero, pspecs, abstract_opt["m"])
+        if zero1 else pspecs
+    )
+    return {"m": m_specs, "v": m_specs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Inputs & caches
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, multi_pod: bool, kind: str) -> Dict[str, P]:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    specs: Dict[str, P] = {}
+    tok_nd = 3 if cfg.n_codebooks > 1 else 2
+    specs["tokens"] = P(dp, *(None,) * (tok_nd - 1))
+    if kind == "train":
+        specs["labels"] = P(dp, *(None,) * (tok_nd - 1))
+    if cfg.n_patches:
+        specs["patch_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    abstract_caches: Any,
+    multi_pod: bool,
+    model_size: int = 16,
+    seq_shard: bool = False,
+) -> Any:
+    """Specs for the decode caches. seq_shard=True (long_500k, batch=1):
+    slots shard over data(+pod); otherwise batch over data(+pod)."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    kv_over_model = _divisible(cfg.n_kv_heads, model_size)
+
+    def rule(path, leaf) -> P:
+        name = getattr(path[-1], "key", None)
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            # (L, B, T, KV, Dh)
+            if seq_shard:
+                return P(None, None, dp, "model" if kv_over_model else None, None)
+            return P(
+                None, dp,
+                None if kv_over_model else "model",
+                "model" if kv_over_model else None,
+                None,
+            )
+        if name == "kv_pos":
+            # (B, T)
+            if seq_shard:
+                return P(None, dp)
+            return P(dp, None if kv_over_model else "model")
+        if name == "h":
+            # (L, B, H, P, N)
+            hp = "model" if _divisible(cfg.n_ssm_heads, model_size) else None
+            return P(None, None if seq_shard else dp, hp, None, None)
+        if name == "conv":
+            # (L, B, K, cdim)
+            cp = "model" if _divisible(
+                cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state, model_size
+            ) else None
+            return P(None, None if seq_shard else dp, None, cp)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_caches)
+
+
+def logits_spec(cfg: ModelConfig, multi_pod: bool, batched: bool = True) -> P:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    lead = dp if batched else None
+    if cfg.n_codebooks > 1:
+        return P(lead, None, None, None)
+    return P(lead, None, None)

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+CPU (this container): trains the reduced variant of any assigned arch on the
+synthetic corpus. TPU fleet: the same entry point with --dry-run lowers the
+full config on the production mesh instead (no allocation).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b --dry-run
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # dryrun must own process startup (XLA_FLAGS before jax init)
+        import os
+        import subprocess
+
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.run(cmd, env=os.environ).returncode)
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..data import BatchIterator
+    from ..models import init_params
+    from ..training import (
+        OptConfig, init_opt_state, make_train_step, save_checkpoint,
+    )
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={cfg.name} (reduced) params={cfg.param_count()/1e6:.1f}M")
+    params = init_params(jax.random.key(0), cfg)
+    opt = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(
+        cfg, OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    ))
+    it = BatchIterator(cfg, batch_size=args.batch, seq_len=args.seq)
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        if cfg.n_patches:
+            batch["patch_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e}")
+    print(f"{args.steps} steps in {time.perf_counter()-t0:.1f}s")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from .config import ModelConfig
+from .transformer import (
+    abstract_params,
+    decode_step,
+    forward_full,
+    init_params,
+    layer_groups,
+    make_decode_caches,
+)
+from .prefill import prefill
+
+__all__ = [
+    "ModelConfig",
+    "abstract_params",
+    "decode_step",
+    "forward_full",
+    "init_params",
+    "layer_groups",
+    "make_decode_caches",
+    "prefill",
+]

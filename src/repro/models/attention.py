@@ -1,0 +1,176 @@
+"""Attention: GQA with RoPE variants, logit softcap, sliding windows.
+
+Two execution paths:
+- ``reference`` — pure jnp einsum path. Used for smoke tests and for the
+  multi-pod dry-run (XLA sees plain dot_generals, so cost_analysis reports
+  true FLOPs/bytes and GSPMD is free to partition heads/sequence).
+- ``pallas``   — the flash-attention / flash-decode kernels from
+  repro.kernels (VMEM-tiled, MXU-aligned), validated against this reference
+  in interpret mode.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Params, apply_rope, dtype_of, softcap
+from .pjit_rules import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(h * dh)
+    p: Params = {
+        "wq": (jax.random.normal(ks[0], (d, h * dh)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kv * dh)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kv * dh)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * dh, d)) * so).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype=dt)
+        p["bk"] = jnp.zeros((kv * dh,), dtype=dt)
+        p["bv"] = jnp.zeros((kv * dh,), dtype=dt)
+    return p
+
+
+def qkv_project(
+    p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> q (B,S,H,Dh), k/v (B,S,KV,Dh), RoPE applied."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def _sdpa_reference(
+    q: jnp.ndarray,        # (B,S,H,Dh)
+    k: jnp.ndarray,        # (B,T,KV,Dh)
+    v: jnp.ndarray,        # (B,T,KV,Dh)
+    q_pos: jnp.ndarray,    # (B,S)
+    kv_pos: jnp.ndarray,   # (B,T)
+    kv_valid: jnp.ndarray, # (B,T) bool
+    cfg: ModelConfig,
+    window: int,
+) -> jnp.ndarray:
+    """Masked GQA SDPA. Causality/window expressed on *positions* so the same
+    code serves full-seq training, prefill, ring-buffer decode, and
+    sequence-sharded long-context decode."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, dh)
+    scale = 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    causal = kv_pos[:, None, :] <= q_pos[:, :, None]              # (B,S,T)
+    mask = causal & kv_valid[:, None, :]
+    if window > 0:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attention_forward(
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    window: int = 0,
+    seq_valid: Optional[jnp.ndarray] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence self-attention (training / prefill). positions is (B,S)
+    or (3,B,S) for M-RoPE. With return_kv, also returns the rotated K and V
+    (for cache seeding during prefill)."""
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q, k, v = qkv_project(p, x, positions, cfg)
+    # logical sharding: context-parallel q (seq over model) when heads can't
+    # shard; K/V stay seq-replicated (GSPMD all-gathers them once per layer)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    b, s = pos1d.shape
+    valid = seq_valid if seq_valid is not None else jnp.ones((b, s), dtype=bool)
+    if cfg.attn_impl == "pallas":
+        from ..kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(
+            q, k, v, pos1d, pos1d, valid,
+            window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        out = _sdpa_reference(q, k, v, pos1d, pos1d, valid, cfg, window)
+    b, s, h, dh = out.shape
+    out = out.reshape(b, s, h * dh) @ p["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def attention_decode(
+    p: Params,
+    x: jnp.ndarray,              # (B,1,D) — the single new token
+    positions: jnp.ndarray,      # (B,1) or (3,B,1)
+    k_cache: jnp.ndarray,        # (B,T,KV,Dh) — already includes this token
+    v_cache: jnp.ndarray,
+    kv_pos: jnp.ndarray,         # (B,T) absolute positions per slot
+    kv_valid: jnp.ndarray,       # (B,T)
+    cfg: ModelConfig,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Single-step decode against a KV cache (full or ring)."""
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    b = x.shape[0]
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+    q = apply_rope(cfg, q, positions)
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention import ops as decode_ops
+
+        out = decode_ops.decode_attention(
+            q, k_cache, v_cache, pos1d, kv_pos, kv_valid,
+            window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        out = _sdpa_reference(q, k_cache, v_cache, pos1d, kv_pos, kv_valid, cfg, window)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def project_kv_step(
+    p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K/V for the current decode token (to be inserted into the cache)."""
+    b = x.shape[0]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    k = apply_rope(cfg, k, positions)
+    return k, v

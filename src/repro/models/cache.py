@@ -1,0 +1,106 @@
+"""KV-cache structures for serving.
+
+Three kinds, composable per layer-group:
+- full cache      (B, T, KV, Dh) per layer — dense/global attention;
+- ring cache      (B, W, KV, Dh) per layer — sliding-window layers
+                  (gemma2 local layers; the long-context variant);
+- SSM state       (B, H, P, N) + conv window — Mamba2/hybrid.
+
+Caches are stacked over the layers of a group (leading L axis) so decode can
+lax.scan over layers. ``kv_pos`` records the absolute position stored in each
+slot (-1 = empty) — attention masks are computed from positions, so ring and
+full caches share one masking rule (models/attention.py).
+
+Sharding (launch/sharding.py): batch over ``data``, kv-heads over ``model``;
+for long_500k (batch=1) the slot axis T shards over ``data`` instead —
+flash-decode with GSPMD partial-softmax combine.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dtype_of
+
+Cache = Dict[str, jnp.ndarray]
+
+
+def init_attn_cache(
+    cfg: ModelConfig, n_layers: int, batch: int, slots: int, dtype=None
+) -> Cache:
+    dt = dtype or dtype_of(cfg.compute_dtype)
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((n_layers, batch, slots, kv, dh), dtype=dt),
+        "v": jnp.zeros((n_layers, batch, slots, kv, dh), dtype=dt),
+        "kv_pos": jnp.full((batch, slots), -1, dtype=jnp.int32),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, dtype=None) -> Cache:
+    from .ssm import conv_dim
+
+    dt = dtype or dtype_of(cfg.compute_dtype)
+    nh, n = cfg.n_ssm_heads, cfg.ssm_state
+    hd = cfg.d_inner // nh
+    return {
+        "h": jnp.zeros((n_layers, batch, nh, hd, n), dtype=dt),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv, conv_dim(cfg)), dtype=dt),
+    }
+
+
+def write_step(
+    cache_k: jnp.ndarray,   # (B, T, KV, Dh) one layer
+    cache_v: jnp.ndarray,
+    k_new: jnp.ndarray,     # (B, 1, KV, Dh)
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,       # (B,) absolute position of the new token
+    ring: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, t = cache_k.shape[0], cache_k.shape[1]
+    slot = pos % t if ring else jnp.minimum(pos, t - 1)
+    bidx = jnp.arange(b)
+    ck = cache_k.at[bidx, slot].set(k_new[:, 0])
+    cv = cache_v.at[bidx, slot].set(v_new[:, 0])
+    return ck, cv
+
+
+def update_kv_pos(kv_pos: jnp.ndarray, pos: jnp.ndarray, ring: bool) -> jnp.ndarray:
+    b, t = kv_pos.shape
+    slot = pos % t if ring else jnp.minimum(pos, t - 1)
+    return kv_pos.at[jnp.arange(b), slot].set(pos)
+
+
+def prefill_kv_pos(batch: int, slots: int, seq_len: int, ring: bool) -> jnp.ndarray:
+    """kv_pos after prefilling seq_len tokens into a cache with `slots` slots."""
+    j = jnp.arange(slots)
+    if not ring or seq_len <= slots:
+        pos = jnp.where(j < seq_len, j, -1)
+    else:
+        # ring holding the last `slots` positions of [0, seq_len)
+        base = seq_len - slots
+        pos = base + ((j - base) % slots)
+    return jnp.broadcast_to(pos, (batch, slots)).astype(jnp.int32)
+
+
+def ring_from_prefill(
+    k: jnp.ndarray,  # (B, S, KV, Dh) — full prefill keys for one layer
+    window: int,
+) -> jnp.ndarray:
+    """Pack the last `window` positions into ring order (slot = pos % W)."""
+    b, s = k.shape[0], k.shape[1]
+    w = window
+    j = jnp.arange(w)
+    if s <= w:
+        gather = jnp.minimum(j, s - 1)
+        out = k[:, gather]
+        valid = j < s
+        out = jnp.where(valid[None, :, None, None], out, 0)
+        return out
+    base = s - w
+    gather = base + ((j - base) % w)
+    return k[:, gather]

@@ -1,0 +1,190 @@
+"""Prefill: full-sequence forward that also seeds the decode caches.
+
+Mirrors transformer.forward_full group by group; each scan body additionally
+emits this layer's rotated K/V (or SSM final/conv state), which the scan
+stacks into the (L, B, ...) cache layout decode_step consumes.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_forward
+from .cache import Cache, prefill_kv_pos, ring_from_prefill
+from .config import ModelConfig
+from .layers import dtype_of, embed_tokens, mlp_forward, rms_norm, unembed
+from .moe import moe_forward
+from .ssm import ssm_forward
+from .transformer import GroupSpec, Params, layer_groups, scan_or_unroll
+
+
+def _dense_block_prefill(bp, x, positions, cfg, window, seq_valid):
+    h, k, v = attention_forward(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions, cfg,
+        window=window, seq_valid=seq_valid, return_kv=True,
+    )
+    x = x + h
+    x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x, k, v
+
+
+def _moe_block_prefill(bp, x, positions, cfg, window, seq_valid):
+    h, k, v = attention_forward(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions, cfg,
+        window=window, seq_valid=seq_valid, return_kv=True,
+    )
+    x = x + h
+    m, aux = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x + m, k, v
+
+
+def _pack_attn_cache(
+    k: jnp.ndarray,  # (L,B,S,KV,Dh) prefill keys
+    v: jnp.ndarray,
+    slots: int,
+    ring: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Place prefill K/V into a cache with `slots` slots (+ kv_pos)."""
+    l, b, s = k.shape[0], k.shape[1], k.shape[2]
+    if ring and slots < s:
+        pack = jax.vmap(lambda a: ring_from_prefill(a, slots))
+        ck, cv = pack(k), pack(v)
+    elif slots == s:
+        ck, cv = k, v
+    else:
+        pad = [(0, 0), (0, 0), (0, slots - s), (0, 0), (0, 0)]
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    kv_pos = prefill_kv_pos(b, slots, s, ring and slots < s)
+    return ck, cv, kv_pos
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                       # (B,S) or (B,S,K)
+    max_len: int,
+    positions: Optional[jnp.ndarray] = None,
+    patch_embeds: Optional[jnp.ndarray] = None,
+    seq_valid: Optional[jnp.ndarray] = None,
+    true_len: Optional[jnp.ndarray] = None,    # (B,) real lengths (bucketed input)
+) -> Tuple[jnp.ndarray, List[Cache], jnp.ndarray]:
+    """Returns (last-position logits (B,V...), caches, next_pos (B,)).
+    max_len = slot count for full caches (prefill len + decode budget).
+
+    With true_len, the input is right-padded to a bucket length: padded
+    positions are masked out of attention and the caches, and the returned
+    logits/next_pos refer to position true_len-1. (Supported for full-cache
+    dense/moe groups — the serving engine's bucketing path.)"""
+    b, s = tokens.shape[0], tokens.shape[1]
+    if true_len is not None:
+        idx = jnp.arange(s, dtype=jnp.int32)
+        seq_valid = idx[None, :] < true_len[:, None]
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        positions = (
+            jnp.broadcast_to(pos1, (3, b, s)) if cfg.rope_style == "mrope" else pos1
+        )
+    x = embed_tokens(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
+    if patch_embeds is not None and cfg.n_patches:
+        npt = patch_embeds.shape[1]
+        x = x.at[:, :npt, :].set(patch_embeds.astype(x.dtype))
+
+    caches: List[Cache] = []
+    sw = cfg.sliding_window or 8192
+    for spec, gp in zip(layer_groups(cfg), params["groups"]):
+        if spec.kind in ("dense", "moe"):
+            ring = cfg.attn_variant == "sliding_window"
+            slots = min(sw, max_len) if ring else max_len
+            w = cfg.window_for_layer(0)
+            block = _dense_block_prefill if spec.kind == "dense" else _moe_block_prefill
+
+            def body(x, bp, _block=block):
+                x, k, v = _block(bp, x, positions, cfg, w, seq_valid)
+                return x, (k, v)
+
+            x, (ks, vs) = scan_or_unroll(body, x, gp, cfg)
+            ck, cv, kv_pos = _pack_attn_cache(ks, vs, slots, ring)
+            if true_len is not None:
+                assert not ring, "bucketed prefill needs full caches"
+                j = jnp.arange(slots, dtype=jnp.int32)
+                kv_pos = jnp.where(j[None, :] < true_len[:, None], j[None, :], -1)
+            caches.append({"k": ck, "v": cv, "kv_pos": kv_pos})
+
+        elif spec.kind == "gemma_pair":
+            ring_g = cfg.attn_variant == "sliding_window"
+            local_w = sw
+            global_w = sw if ring_g else 0
+            g_slots = min(sw, max_len) if ring_g else max_len
+            l_slots = min(cfg.sliding_window, max_len)
+
+            def body(x, bp):
+                x, lk, lv = _dense_block_prefill(
+                    bp["local"], x, positions, cfg, local_w, seq_valid
+                )
+                x, gk, gv = _dense_block_prefill(
+                    bp["global"], x, positions, cfg, global_w, seq_valid
+                )
+                return x, (lk, lv, gk, gv)
+
+            x, (lks, lvs, gks, gvs) = scan_or_unroll(body, x, gp, cfg)
+            lck, lcv, l_pos = _pack_attn_cache(lks, lvs, l_slots, True)
+            gck, gcv, g_pos = _pack_attn_cache(gks, gvs, g_slots, ring_g)
+            caches.append({
+                "local": {"k": lck, "v": lcv, "kv_pos": l_pos},
+                "global": {"k": gck, "v": gcv, "kv_pos": g_pos},
+            })
+
+        elif spec.kind == "mamba":
+            def body(x, bp):
+                out, final, conv = ssm_forward(
+                    bp["ssm"], rms_norm(x, bp["norm"], cfg.norm_eps), cfg
+                )
+                return x + out, (final, conv)
+
+            x, (hs, convs) = scan_or_unroll(body, x, gp, cfg)
+            caches.append({"h": hs, "conv": convs})
+
+        elif spec.kind == "zamba":
+            ring = cfg.attn_variant == "sliding_window"
+            slots = min(sw, max_len) if ring else max_len
+            window = sw if ring else 0
+            shared_bp = params["shared_attn"]
+
+            def body(x, bp_group):
+                h_list, c_list = [], []
+                for i in range(spec.period):
+                    bp_i = jax.tree.map(lambda a: a[i], bp_group)
+                    out, final, conv = ssm_forward(
+                        bp_i["ssm"], rms_norm(x, bp_i["norm"], cfg.norm_eps), cfg
+                    )
+                    x = x + out
+                    h_list.append(final)
+                    c_list.append(conv)
+                x, k, v = _dense_block_prefill(
+                    shared_bp, x, positions, cfg, window, seq_valid
+                )
+                return x, (jnp.stack(h_list), jnp.stack(c_list), k, v)
+
+            x, (hs, convs, ks, vs) = scan_or_unroll(body, x, gp, cfg)
+            ck, cv, kv_pos = _pack_attn_cache(ks, vs, slots, ring)
+            n_cov = spec.n_blocks * spec.period
+            caches.append({
+                "ssm": {
+                    "h": hs.reshape((n_cov,) + hs.shape[2:]),
+                    "conv": convs.reshape((n_cov,) + convs.shape[2:]),
+                },
+                "attn": {"k": ck, "v": cv, "kv_pos": kv_pos},
+            })
+        else:
+            raise ValueError(spec.kind)
+
+    if true_len is not None:
+        last = x[jnp.arange(b), true_len - 1][:, None, :]
+        logits = unembed(params["embed"], last, cfg)
+        return logits[:, 0], caches, true_len.astype(jnp.int32)
+    logits = unembed(params["embed"], x[:, -1:, :], cfg)
+    next_pos = jnp.full((b,), s, dtype=jnp.int32)
+    return logits[:, 0], caches, next_pos

@@ -1,0 +1,223 @@
+"""Mamba2 — state-space duality (SSD) blocks [arXiv:2405.21060].
+
+Full-sequence forward uses the chunked SSD algorithm: quadratic
+attention-like computation *within* chunks plus a linear inter-chunk state
+recurrence. Decode is the O(1) recurrent step on (B, H, P, N) state.
+
+The intra-chunk einsums are the compute hot spot and have a Pallas kernel
+(repro.kernels.ssd); this file is the pure-jnp reference implementation the
+kernel is validated against — and the path XLA lowers for the dry-run.
+
+Adaptation note (DESIGN.md §3): the CUDA Mamba2 kernel fuses the scan with
+warp-level shuffles; on TPU we express the recurrence as chunked matmuls
+(MXU-friendly) + a lax.scan over chunk states, which is the TPU-idiomatic
+formulation of the same SSD math.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Params, dtype_of, rms_norm
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    nh = cfg.n_ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    cdim = conv_dim(cfg)
+    d_in_proj = 2 * di + 2 * g * n + nh
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in_proj)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, cdim)) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((cdim,), dtype=dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ).astype(jnp.float32),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype=dt),
+        "out_proj": (
+            jax.random.normal(ks[2], (di, d)) / np.sqrt(di)
+        ).astype(dt),
+    }
+
+
+def _causal_conv_full(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq. xbc: (B,L,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_reference(
+    x: jnp.ndarray,     # (B,L,H,P)
+    dt: jnp.ndarray,    # (B,L,H) — post-softplus
+    A: jnp.ndarray,     # (H,) negative
+    Bv: jnp.ndarray,    # (B,L,G,N)
+    Cv: jnp.ndarray,    # (B,L,G,N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,   # (B,H,P,N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B,L,H,P), final_state (B,H,P,N)).
+
+    Assumes G=1 groups broadcast over heads (standard Mamba2)."""
+    b, l, h, p = x.shape
+    g, n = Bv.shape[2], Bv.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    Bc = Bv.reshape(b, nc, q, g, n).astype(f32)[:, :, :, 0]       # (b,nc,q,n)
+    Cc = Cv.reshape(b, nc, q, g, n).astype(f32)[:, :, :, 0]
+
+    dA = dtc * A.astype(f32)                                       # (b,nc,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)                                 # inclusive
+    # decay from j to i within chunk (i >= j): exp(cs_i - cs_j)
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]        # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: masked (i<j) entries are positive and overflow to
+    # inf, which poisons gradients through the where (inf·0 → NaN in bwd)
+    seg = jnp.where(causal, seg, 0.0)
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    # intra-chunk (the attention-like quadratic term)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                     # (b,nc,q,q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", cb, L, dtc, xc)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)            # (b,nc,q,h)
+    states = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end, dtc, Bc, xc)                 # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                     # (b,nc,h)
+    init = (
+        h0.astype(f32) if h0 is not None else jnp.zeros((b, h, p, n), f32)
+    )
+
+    def step(carry, inp):
+        s_c, dec = inp                                             # (b,h,p,n),(b,h)
+        new = carry * dec[:, :, None, None] + s_c
+        return new, carry                                          # emit state *before* chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)                          # (nc,b,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                      # (nc,b,h)
+    final, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                  # (b,nc,h,p,n)
+
+    # contribution of the carried state to each position
+    state_decay = jnp.exp(dA_cs)                                   # (b,nc,q,h)
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cc, prev_states, state_decay
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssm_forward(
+    p: Params,
+    xin: jnp.ndarray,           # (B,L,D)
+    cfg: ModelConfig,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 block.
+
+    Returns (out (B,L,D), final_state (B,H,P,N), conv_state (B,K,cdim)) —
+    the latter two seed the decode caches after prefill."""
+    b, l, d = xin.shape
+    di, nh, g, n = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_groups, cfg.ssm_state
+    hd = di // nh
+
+    zxbcdt = xin @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim(cfg)], axis=-1)
+    # conv state = last K raw (pre-conv) xbc rows, left-padded if l < K
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (max(0, k - l), 0), (0, 0)))
+    conv_state = pad[:, -k:, :]
+    xbc = _causal_conv_full(xbc, p["conv_w"], p["conv_b"])
+    x, Bv, Cv = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x = x.reshape(b, l, nh, hd)
+    Bv = Bv.reshape(b, l, g, n)
+    Cv = Cv.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cfg.attn_impl == "pallas":
+        from ..kernels.ssd import ops as ssd_ops
+
+        y, final = ssd_ops.ssd(x, dt, A, Bv, Cv, cfg.ssm_chunk, h0)
+    else:
+        y, final = ssd_reference(x, dt, A, Bv, Cv, cfg.ssm_chunk, h0)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], final, conv_state.astype(xin.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent step
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    di, nh, n = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state
+    hd = di // nh
+    return {
+        "h": jnp.zeros((batch, nh, hd, n), dtype=dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv, conv_dim(cfg)), dtype=dtype),
+    }
+
+
+def ssm_decode_step(
+    p: Params,
+    xin: jnp.ndarray,            # (B,1,D)
+    state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = xin.shape[0]
+    di, nh, g, n = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_groups, cfg.ssm_state
+    hd = di // nh
+
+    zxbcdt = xin[:, 0] @ p["in_proj"]                               # (B, ·)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim(cfg)], axis=-1)
+
+    conv = jnp.concatenate([state["conv"][:, 1:], xbc[:, None, :]], axis=1)
+    xbc = jax.nn.silu(
+        jnp.sum(conv * p["conv_w"][None], axis=1) + p["conv_b"]
+    )
+    x, Bv, Cv = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x = x.reshape(b, nh, hd)
+    Bv = Bv.reshape(b, g, n)[:, 0]                                   # (B,N)
+    Cv = Cv.reshape(b, g, n)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt * A)                                          # (B,H)
+    h_new = (
+        state["h"].astype(jnp.float32) * decay[:, :, None, None]
+        + dt[:, :, None, None]
+        * x.astype(jnp.float32)[:, :, :, None]
+        * Bv.astype(jnp.float32)[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cv.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, di).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h_new.astype(state["h"].dtype), "conv": conv}

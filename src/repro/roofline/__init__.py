@@ -1,0 +1,7 @@
+from .analysis import (
+    RooflineResult,
+    collective_bytes_by_type,
+    model_flops,
+)
+
+__all__ = ["RooflineResult", "collective_bytes_by_type", "model_flops"]

@@ -1,0 +1,144 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s ICI)
+
+HLO_FLOPs/bytes come from compiled.cost_analysis(). collective_bytes is
+parsed from the partitioned HLO text: the summed result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The partitioned module reports per-device shapes, so the collective term is
+per-chip wire bytes (our convention: result-shape bytes; an upper bound for
+reduce-scatter, exact for permute/all-gather receive volume).
+
+MODEL_FLOPS uses 6·N·D (train) or 2·N·D (forward) with N = total params
+(dense) / active params (MoE); the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat recompute and dispatch overhead.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from ..launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from ..models.config import ModelConfig
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "%x = f32[8,128]{1,0} all-gather(...)" or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9_]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_by_type(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c + "_count": 0 for c in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        total = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(m.group("result"))
+        )
+        out[op] += total
+        counts[op + "_count"] += 1
+    out.update(counts)  # type: ignore[arg-type]
+    return out
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0
+    peak_memory_bytes: Optional[float] = None
+
+    # NOTE: compiled.cost_analysis() reports PER-DEVICE numbers (the SPMD-
+    # partitioned module), verified against hand counts — so the terms divide
+    # by one chip's peak, and the chips divisor appears only in the
+    # useful-flops comparison.
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # per-chip wire bytes already (partitioned HLO shapes)
+        return self.collective_bytes / ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS/chip vs compiled FLOPs/chip — <1 means remat
+        recompute, attention quadratic work, or dispatch overhead."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / self.hlo_flops
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "model_flops": self.model_flops,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """Analytic MODEL_FLOPS for the workload (active params for MoE)."""
+    n = cfg.active_param_count()
+    tokens = batch * seq if kind in ("train", "prefill") else batch  # decode: 1 tok
+    per_token = 6 * n if kind == "train" else 2 * n
+    return float(per_token) * tokens

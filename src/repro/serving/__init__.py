@@ -1,0 +1,11 @@
+from .engine import InferenceEngine, JaxLLMService
+from .sampling import sample
+from .scheduler import BatchedServer, FinishedRequest
+
+__all__ = [
+    "InferenceEngine",
+    "JaxLLMService",
+    "sample",
+    "BatchedServer",
+    "FinishedRequest",
+]

@@ -1,0 +1,142 @@
+"""JAX inference engine — the real LLM Service behind the Context Manager.
+
+Design mirrors the paper's modified llama.cpp server (§4.1): the completion
+entry point takes a *pre-tokenized context* plus prompt token ids, so stored
+session history is never re-tokenized. Greedy decoding, temperature 0,
+max 128 new tokens — the paper's settings.
+
+Prompt lengths are bucketed (multiples of ``bucket``) so the jitted prefill
+compiles once per bucket, not per request; padded positions are masked via
+``true_len``. The decode loop reuses one jitted step with donated caches.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.manager import ServiceResult
+from ..models import ModelConfig, decode_step, init_params, prefill
+from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
+from .sampling import sample
+
+
+def _bucket(n: int, step: int) -> int:
+    return max(step, ((n + step - 1) // step) * step)
+
+
+@dataclass
+class InferenceEngine:
+    cfg: ModelConfig
+    params: Dict
+    max_len: int = 1024          # cache slots (context + generation budget)
+    bucket: int = 64
+    stop_tokens: Tuple[int, ...] = (EOS, IM_END)
+
+    _prefill_cache: Dict[int, object] = field(default_factory=dict, repr=False)
+    _decode_fn: Optional[object] = field(default=None, repr=False)
+
+    @classmethod
+    def create(
+        cls, cfg: ModelConfig, seed: int = 0, max_len: int = 1024, bucket: int = 64
+    ) -> "InferenceEngine":
+        params = init_params(jax.random.key(seed), cfg)
+        return cls(cfg=cfg, params=params, max_len=max_len, bucket=bucket)
+
+    # -- jit plumbing -------------------------------------------------------
+    def _prefill_fn(self, s: int):
+        if s not in self._prefill_cache:
+            cfg, max_len = self.cfg, self.max_len
+
+            @jax.jit
+            def fn(params, tokens, true_len):
+                return prefill(params, cfg, tokens, max_len=max_len, true_len=true_len)
+
+            self._prefill_cache[s] = fn
+        return self._prefill_cache[s]
+
+    def _decode(self):
+        if self._decode_fn is None:
+            cfg = self.cfg
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def fn(params, caches, tokens, pos):
+                return decode_step(params, cfg, caches, tokens, pos)
+
+            self._decode_fn = fn
+        return self._decode_fn
+
+    # -- public API ------------------------------------------------------------
+    def generate(
+        self,
+        input_ids: List[int],
+        max_new_tokens: int = 128,
+        temperature: float = 0.0,
+    ) -> List[int]:
+        """Single-sequence generation (the Context Manager path)."""
+        n = len(input_ids)
+        assert n + max_new_tokens <= self.max_len, (n, max_new_tokens, self.max_len)
+        s = min(_bucket(n, self.bucket), self.max_len)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :n] = np.asarray(input_ids, np.int32) % self.cfg.vocab_size
+        true_len = jnp.array([n], jnp.int32)
+
+        logits, caches, pos = self._prefill_fn(s)(self.params, jnp.asarray(toks), true_len)
+        out: List[int] = []
+        tok = sample(logits, temperature=temperature)
+        decode = self._decode()
+        for _ in range(max_new_tokens):
+            t = int(tok[0])
+            out.append(t)
+            if t in self.stop_tokens:
+                break
+            logits, caches = decode(self.params, caches, tok[:, None], pos)
+            pos = pos + 1
+            tok = sample(logits[:, 0], temperature=temperature)
+        return out
+
+    def warmup(self, lengths: Tuple[int, ...] = (64,)) -> None:
+        for s in lengths:
+            ids = list(range(min(s, 16)))
+            self.generate(ids, max_new_tokens=2)
+
+
+@dataclass
+class JaxLLMService:
+    """LLM Service (paper §3.2) backed by the JAX engine. Accepts the
+    pre-tokenized context parameter — the llama.cpp /completion extension."""
+
+    model: str
+    engine: InferenceEngine
+    tokenizer: ByteLevelBPE
+
+    @classmethod
+    def create(
+        cls,
+        model: str,
+        cfg: ModelConfig,
+        *,
+        seed: int = 0,
+        tokenizer_seed: int = 0,
+        max_len: int = 2048,
+    ) -> "JaxLLMService":
+        engine = InferenceEngine.create(cfg, seed=seed, max_len=max_len)
+        tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
+        return cls(model=model, engine=engine, tokenizer=tok)
+
+    def completion(
+        self, context_ids: List[int], prompt_ids: List[int], max_new_tokens: int
+    ) -> ServiceResult:
+        t0 = time.perf_counter()
+        ids = list(context_ids) + list(prompt_ids)
+        budget = self.engine.max_len - len(ids) - 1
+        gen = self.engine.generate(ids, max_new_tokens=min(max_new_tokens, max(1, budget)))
+        inference_ms = (time.perf_counter() - t0) * 1e3
+        text = self.tokenizer.decode([t for t in gen if t not in self.engine.stop_tokens])
+        return ServiceResult(text=text, token_ids=gen, inference_ms=inference_ms)

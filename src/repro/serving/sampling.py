@@ -1,0 +1,27 @@
+"""Token sampling. The paper runs greedy (temperature 0, fixed seed)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jnp.ndarray,          # (B, V)
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Returns (B,) sampled token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    assert key is not None, "temperature > 0 needs a PRNG key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,176 @@
+"""Multi-tenant continuous-batching scheduler (beyond-paper: the paper's
+evaluation is single-client and names multi-tenant scalability as future
+work, §5).
+
+Slot-based continuous batching: a fixed decode batch of ``n_slots`` shares
+one batched KV cache. Incoming requests prefill into a free slot (B=1
+prefill, inserted at the slot index); every step() decodes all occupied
+slots in a single jitted call. Finished sequences free their slot for the
+next queued request — the standard vLLM-style loop, minus paging.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, decode_step, make_decode_caches, prefill
+from ..tokenizer import EOS, IM_END
+from .sampling import sample
+
+
+@dataclass
+class SlotState:
+    request_id: int
+    pos: int
+    generated: List[int] = field(default_factory=list)
+    max_new: int = 128
+    done: bool = False
+
+
+@dataclass
+class FinishedRequest:
+    request_id: int
+    token_ids: List[int]
+    submitted_at: float
+    finished_at: float
+
+
+class BatchedServer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        n_slots: int = 4,
+        max_len: int = 512,
+        stop_tokens=(EOS, IM_END),
+    ) -> None:
+        assert cfg.attn_variant == "full" and cfg.arch_type in ("dense", "moe", "vlm"), (
+            "batched server currently supports full-cache attention archs"
+        )
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.stop_tokens = set(stop_tokens)
+        self.caches = make_decode_caches(cfg, n_slots, max_len, dtype=jnp.float32
+                                         if cfg.compute_dtype == "float32" else None)
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+        self.queue: List = []
+        self.finished: List[FinishedRequest] = []
+        self._submit_times: Dict[int, float] = {}
+        self._next_tok = np.zeros((n_slots,), np.int32)
+        self._req_seq = 0
+
+        @jax.jit
+        def _prefill_one(params, tokens, true_len):
+            return prefill(params, cfg, tokens, max_len=max_len, true_len=true_len)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def _decode(params, caches, tokens, pos):
+            return decode_step(params, cfg, caches, tokens, pos)
+
+        self._prefill_one = _prefill_one
+        self._decode = _decode
+        self._pos = jnp.zeros((n_slots,), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, token_ids: List[int], max_new: int = 32) -> int:
+        rid = self._req_seq
+        self._req_seq += 1
+        self.queue.append((rid, list(token_ids), max_new))
+        self._submit_times[rid] = time.perf_counter()
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    def _insert_slot(self, idx: int, rid: int, ids: List[int], max_new: int) -> None:
+        n = len(ids)
+        s = min(self.max_len, max(16, n))
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
+        logits, one_caches, pos = self._prefill_one(
+            self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
+        )
+
+        def put(big, small):
+            if big.ndim == small.ndim:      # stacked over layers: (L,B,...)
+                return big.at[:, idx].set(small[:, 0])
+            raise AssertionError
+
+        new_caches = []
+        for big, small in zip(self.caches, one_caches):
+            merged = {}
+            for k in big:
+                if isinstance(big[k], dict):
+                    merged[k] = {kk: self._put_entry(big[k][kk], small[k][kk], idx, kk)
+                                 for kk in big[k]}
+                else:
+                    merged[k] = self._put_entry(big[k], small[k], idx, k)
+            new_caches.append(merged)
+        self.caches = new_caches
+        self._pos = self._pos.at[idx].set(int(pos[0]))
+        self._next_tok[idx] = int(jnp.argmax(logits[0]))
+        self.slots[idx] = SlotState(request_id=rid, pos=n, max_new=max_new)
+
+    @staticmethod
+    def _put_entry(big: jnp.ndarray, small: jnp.ndarray, idx: int, name: str):
+        if name in ("k", "v"):            # (L,B,T,KV,Dh)
+            t = min(big.shape[2], small.shape[2])
+            return big.at[:, idx, :t].set(small[:, 0, :t])
+        if name == "kv_pos":              # (B,T)
+            t = min(big.shape[1], small.shape[1])
+            return big.at[idx, :t].set(small[0, :t])
+        # ssm states: (L,B,...)
+        return big.at[:, idx].set(small[:, 0])
+
+    def step(self) -> None:
+        """One scheduler tick: admit queued work into free slots, then decode
+        every occupied slot in a single batched call."""
+        for idx in range(self.n_slots):
+            if self.slots[idx] is None and self.queue:
+                rid, ids, max_new = self.queue.pop(0)
+                self._insert_slot(idx, rid, ids, max_new)
+        if not any(s is not None for s in self.slots):
+            return
+
+        tokens = jnp.asarray(self._next_tok)[:, None]
+        logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)
+        self._pos = self._pos + 1
+        nxt = np.asarray(sample(logits[:, 0]))
+
+        for idx, st in enumerate(self.slots):
+            if st is None:
+                continue
+            tok = int(self._next_tok[idx])
+            st.generated.append(tok)
+            st.pos += 1
+            if (
+                tok in self.stop_tokens
+                or len(st.generated) >= st.max_new
+                or st.pos >= self.max_len - 1
+            ):
+                self.finished.append(
+                    FinishedRequest(
+                        st.request_id,
+                        st.generated,
+                        self._submit_times.pop(st.request_id),
+                        time.perf_counter(),
+                    )
+                )
+                self.slots[idx] = None
+            else:
+                self._next_tok[idx] = int(nxt[idx])
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[FinishedRequest]:
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

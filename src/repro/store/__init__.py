@@ -1,0 +1,15 @@
+from .kvstore import Replica, VersionedValue
+from .network import Link, Network, SimClock, TrafficCounter
+from .distributed import DistributedKVStore, Keygroup, SYNC_TAG
+
+__all__ = [
+    "Replica",
+    "VersionedValue",
+    "Link",
+    "Network",
+    "SimClock",
+    "TrafficCounter",
+    "DistributedKVStore",
+    "Keygroup",
+    "SYNC_TAG",
+]

@@ -1,0 +1,150 @@
+"""FReD-like geo-distributed KV store (paper §2.2.1/§3.3).
+
+- *Keygroups*: one per language model; context replicates only among nodes
+  serving that model.
+- Peer-to-peer asynchronous replication over the network simulator; arrival
+  times depend on value size → tokenized contexts genuinely sync faster than
+  raw text (the paper's Fig. 5 effect).
+- TTL per keygroup for automatic stale-context cleanup; explicit delete for
+  the client-requested path.
+- Replication mode ``full`` ships the whole value on every write (what the
+  paper's prototype does); ``delta`` is our beyond-paper optimization that
+  ships only the token suffix since the peer's last acknowledged version
+  (LLM context grows monotonically — §2.2.2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .kvstore import Replica, VersionedValue
+from .network import Network
+
+SizeFn = Callable[[Any], int]
+DeltaSizeFn = Callable[[Any, int], int]
+
+SYNC_TAG = "fred-peer-sync"  # the port the paper tcpdumps
+
+
+@dataclass
+class Keygroup:
+    name: str
+    members: List[str]
+    size_fn: SizeFn
+    delta_size_fn: Optional[DeltaSizeFn] = None
+    ttl_ms: Optional[float] = None
+
+
+def _default_size(value: Any) -> int:
+    if hasattr(value, "wire_bytes"):
+        try:
+            return int(value.wire_bytes())
+        except TypeError:
+            pass
+    if isinstance(value, (bytes, bytearray)):
+        return len(value)
+    if isinstance(value, str):
+        return len(value.encode("utf-8"))
+    return 64
+
+
+class DistributedKVStore:
+    """The storage layer of a DisCEdge deployment."""
+
+    def __init__(self, network: Network, replication: str = "full") -> None:
+        assert replication in ("full", "delta")
+        self.network = network
+        self.replication = replication
+        self._keygroups: Dict[str, Keygroup] = {}
+        self._replicas: Dict[Tuple[str, str], Replica] = {}
+        # (keygroup, key, src, dst) -> last version successfully shipped
+        self._peer_acked: Dict[Tuple[str, str, str, str], int] = {}
+        self.replicated_writes = 0
+        self.dropped_stale_applies = 0
+
+    # -- keygroups ----------------------------------------------------------
+    def create_keygroup(
+        self,
+        name: str,
+        members: List[str],
+        size_fn: Optional[SizeFn] = None,
+        delta_size_fn: Optional[DeltaSizeFn] = None,
+        ttl_ms: Optional[float] = None,
+    ) -> Keygroup:
+        kg = Keygroup(name, list(members), size_fn or _default_size, delta_size_fn, ttl_ms)
+        self._keygroups[name] = kg
+        for n in members:
+            self._replicas[(n, name)] = Replica(n, name)
+        return kg
+
+    def keygroup(self, name: str) -> Keygroup:
+        return self._keygroups[name]
+
+    def replica(self, node: str, keygroup: str) -> Replica:
+        return self._replicas[(node, keygroup)]
+
+    # -- client-facing ops (called by the Context Manager, paper §3.3) -------
+    def get(self, node: str, keygroup: str, key: str) -> Optional[VersionedValue]:
+        return self.replica(node, keygroup).get(key, self.network.clock.now_ms)
+
+    def put(
+        self, node: str, keygroup: str, key: str, value: Any, version: int,
+    ) -> Dict[str, float]:
+        """Local write + async replication to keygroup peers. Returns
+        {peer: arrival_ms}. The local write is immediate (in-memory)."""
+        kg = self._keygroups[keygroup]
+        now = self.network.clock.now_ms
+        vv = self.replica(node, keygroup).put(
+            key, value, version, now, ttl_ms=kg.ttl_ms, origin=node
+        )
+        arrivals: Dict[str, float] = {}
+        for peer in kg.members:
+            if peer == node:
+                continue
+            payload = self._payload_bytes(kg, key, node, peer, value, version)
+            replica = self.replica(peer, keygroup)
+            # Capture a snapshot for delivery; the writer may keep mutating
+            # its local object (the Context Manager appends turns in place).
+            snapshot = value.copy() if hasattr(value, "copy") else value
+            shipped = VersionedValue(snapshot, version, now, kg.ttl_ms, node)
+
+            def deliver(r: Replica = replica, k: str = key, v: VersionedValue = shipped) -> None:
+                if not r.apply_replicated(k, v):
+                    self.dropped_stale_applies += 1
+
+            arrivals[peer] = self.network.send_async(
+                node, peer, payload, SYNC_TAG, deliver
+            )
+            self._peer_acked[(keygroup, key, node, peer)] = version
+            self.replicated_writes += 1
+        return arrivals
+
+    def delete(self, node: str, keygroup: str, key: str) -> None:
+        """Client-requested context deletion (paper §3.3) — propagated."""
+        kg = self._keygroups[keygroup]
+        self.replica(node, keygroup).delete(key)
+        for peer in kg.members:
+            if peer == node:
+                continue
+            replica = self.replica(peer, keygroup)
+            self.network.send_async(
+                node, peer, 48, SYNC_TAG, lambda r=replica, k=key: r.delete(k)
+            )
+
+    # -- internals ------------------------------------------------------------
+    def _payload_bytes(
+        self, kg: Keygroup, key: str, src: str, dst: str, value: Any, version: int
+    ) -> int:
+        if self.replication == "delta" and kg.delta_size_fn is not None:
+            acked = self._peer_acked.get((kg.name, key, src, dst), 0)
+            return kg.delta_size_fn(value, acked)
+        return kg.size_fn(value)
+
+    # -- observability ---------------------------------------------------------
+    def sync_bytes(self) -> int:
+        """Total inter-node synchronization traffic (paper Fig. 5)."""
+        return self.network.bytes_for_tag(SYNC_TAG)
+
+    def sync_messages(self) -> int:
+        return self.network.messages_for_tag(SYNC_TAG)

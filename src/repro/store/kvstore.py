@@ -1,0 +1,83 @@
+"""Single-replica in-memory versioned KV store.
+
+Models one FReD node's local replica (paper §3.3 / §4.1): in-memory reads and
+writes, per-key version stamps (the session turn counter), TTL-based expiry,
+and last-writer-wins on version for replicated applies. Asynchronous disk
+persistence exists in FReD but the paper evaluates memory-only — so do we.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+
+@dataclass
+class VersionedValue:
+    value: Any
+    version: int            # DisCEdge: the session turn counter
+    written_at_ms: float
+    ttl_ms: Optional[float] = None
+    origin: str = ""        # node that produced this version
+
+    def expired(self, now_ms: float) -> bool:
+        return self.ttl_ms is not None and now_ms - self.written_at_ms > self.ttl_ms
+
+
+class Replica:
+    """One node's local replica of one keygroup."""
+
+    def __init__(self, node: str, keygroup: str) -> None:
+        self.node = node
+        self.keygroup = keygroup
+        self._data: Dict[str, VersionedValue] = {}
+        self.reads = 0
+        self.writes = 0
+        self.stale_reads = 0
+
+    def get(self, key: str, now_ms: float) -> Optional[VersionedValue]:
+        self.reads += 1
+        vv = self._data.get(key)
+        if vv is None:
+            return None
+        if vv.expired(now_ms):
+            del self._data[key]
+            return None
+        return vv
+
+    def put(
+        self, key: str, value: Any, version: int, now_ms: float,
+        ttl_ms: Optional[float] = None, origin: str = "",
+    ) -> VersionedValue:
+        self.writes += 1
+        vv = VersionedValue(value, version, now_ms, ttl_ms, origin or self.node)
+        self._data[key] = vv
+        return vv
+
+    def apply_replicated(self, key: str, vv: VersionedValue) -> bool:
+        """Apply a peer's write. Last-writer-wins on version — the turn counter
+        is monotone per session, so a lower version is always stale."""
+        cur = self._data.get(key)
+        if cur is not None and cur.version >= vv.version:
+            self.stale_reads += 1
+            return False
+        self._data[key] = vv
+        return True
+
+    def delete(self, key: str) -> bool:
+        return self._data.pop(key, None) is not None
+
+    def sweep_expired(self, now_ms: float) -> int:
+        dead = [k for k, v in self._data.items() if v.expired(now_ms)]
+        for k in dead:
+            del self._data[k]
+        return len(dead)
+
+    def items(self) -> Iterator[Tuple[str, VersionedValue]]:
+        return iter(self._data.items())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)

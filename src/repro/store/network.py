@@ -1,0 +1,143 @@
+"""Discrete-event network simulator.
+
+Stands in for the paper's LAN testbed. Every byte that crosses a link is
+accounted per (src, dst, tag) — our equivalent of the paper's tcpdump/tshark
+capture on the FReD peer port (§4.2), but exact rather than sampled.
+
+The simulation is deterministic: a shared millisecond clock, per-link latency
+and bandwidth, optional seeded jitter. Deliveries are a min-heap of events the
+cluster applies when the clock advances past their arrival time.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class SimClock:
+    now_ms: float = 0.0
+
+    def advance(self, dt_ms: float) -> float:
+        assert dt_ms >= 0
+        self.now_ms += dt_ms
+        return self.now_ms
+
+    def advance_to(self, t_ms: float) -> float:
+        self.now_ms = max(self.now_ms, t_ms)
+        return self.now_ms
+
+
+@dataclass
+class Link:
+    """Point-to-point link with latency + bandwidth. transfer(b) returns the
+    one-way transfer time for b bytes."""
+
+    latency_ms: float = 1.0
+    bandwidth_mbps: float = 1000.0  # megabits/s
+
+    def transfer_ms(self, n_bytes: int) -> float:
+        return self.latency_ms + (n_bytes * 8) / (self.bandwidth_mbps * 1e3)
+
+
+@dataclass
+class TrafficCounter:
+    bytes_total: int = 0
+    messages: int = 0
+    # TCP-ish fixed overhead per message, like the handshakes tcpdump catches
+    per_message_overhead: int = 66
+
+    def record(self, n_bytes: int) -> int:
+        wire = n_bytes + self.per_message_overhead
+        self.bytes_total += wire
+        self.messages += 1
+        return wire
+
+
+class Network:
+    """Topology + event queue. Node names are strings; links are symmetric by
+    default but can be overridden per direction."""
+
+    def __init__(self, default_link: Optional[Link] = None) -> None:
+        self.clock = SimClock()
+        self.default_link = default_link or Link()
+        self._links: Dict[Tuple[str, str], Link] = {}
+        self._counters: Dict[Tuple[str, str, str], TrafficCounter] = {}
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    # -- topology -----------------------------------------------------------
+    def set_link(self, src: str, dst: str, link: Link, symmetric: bool = True) -> None:
+        self._links[(src, dst)] = link
+        if symmetric:
+            self._links[(dst, src)] = link
+
+    def link(self, src: str, dst: str) -> Link:
+        return self._links.get((src, dst), self.default_link)
+
+    # -- accounting ---------------------------------------------------------
+    def counter(self, src: str, dst: str, tag: str) -> TrafficCounter:
+        key = (src, dst, tag)
+        if key not in self._counters:
+            self._counters[key] = TrafficCounter()
+        return self._counters[key]
+
+    def bytes_for_tag(self, tag: str) -> int:
+        return sum(c.bytes_total for (s, d, t), c in self._counters.items() if t == tag)
+
+    def messages_for_tag(self, tag: str) -> int:
+        return sum(c.messages for (s, d, t), c in self._counters.items() if t == tag)
+
+    # -- transfers ----------------------------------------------------------
+    def send(self, src: str, dst: str, n_bytes: int, tag: str) -> float:
+        """Synchronous transfer: returns the transfer time in ms (caller
+        advances the clock — used for the client<->node request path)."""
+        self.counter(src, dst, tag).record(n_bytes)
+        return self.link(src, dst).transfer_ms(n_bytes)
+
+    def send_async(
+        self, src: str, dst: str, n_bytes: int, tag: str,
+        on_delivery: Callable[[], None], extra_delay_ms: float = 0.0,
+    ) -> float:
+        """Asynchronous transfer (replication path): schedules on_delivery at
+        arrival time; returns the arrival time in ms."""
+        self.counter(src, dst, tag).record(n_bytes)
+        arrival = (
+            self.clock.now_ms + extra_delay_ms + self.link(src, dst).transfer_ms(n_bytes)
+        )
+        heapq.heappush(self._events, (arrival, next(self._seq), on_delivery))
+        return arrival
+
+    def schedule(self, at_ms: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (at_ms, next(self._seq), fn))
+
+    # -- event pump ---------------------------------------------------------
+    def deliver_until(self, t_ms: Optional[float] = None) -> int:
+        """Apply every event with arrival <= t_ms (default: now). Returns the
+        number applied. Does NOT advance the clock."""
+        limit = self.clock.now_ms if t_ms is None else t_ms
+        n = 0
+        while self._events and self._events[0][0] <= limit:
+            _, _, fn = heapq.heappop(self._events)
+            fn()
+            n += 1
+        return n
+
+    def advance(self, dt_ms: float) -> None:
+        self.clock.advance(dt_ms)
+        self.deliver_until()
+
+    def run_until_quiet(self, max_ms: float = 1e9) -> float:
+        """Drain all pending events (eventual-consistency convergence)."""
+        while self._events and self._events[0][0] <= max_ms:
+            t, _, fn = heapq.heappop(self._events)
+            self.clock.advance_to(t)
+            fn()
+        return self.clock.now_ms
+
+    @property
+    def pending_events(self) -> int:
+        return len(self._events)

@@ -1,0 +1,18 @@
+from .optimizer import OptConfig, adamw_update, global_norm, init_opt_state, schedule
+from .trainer import cross_entropy, grads_fn, loss_fn, make_train_step, train_step
+from .checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "OptConfig",
+    "adamw_update",
+    "global_norm",
+    "init_opt_state",
+    "schedule",
+    "cross_entropy",
+    "grads_fn",
+    "loss_fn",
+    "make_train_step",
+    "train_step",
+    "load_checkpoint",
+    "save_checkpoint",
+]

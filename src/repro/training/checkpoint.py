@@ -1,0 +1,78 @@
+"""Pytree checkpointing via msgpack (no orbax in this environment).
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
+round-tripped through flatten-with-paths so restores are layout-independent.
+bf16 is handled via a uint16 view (msgpack/numpy have no native bf16).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _encode_array(x) -> Dict[str, Any]:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _decode_array(d: Dict[str, Any]) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], dtype=np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_key_str(kp)] = _encode_array(leaf)
+    payload = {"step": step, "arrays": flat}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for kp, leaf in leaves_with_path:
+        k = _key_str(kp)
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing {k}")
+        arr = _decode_array(arrays[k])
+        expect = tuple(leaf.shape)
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"{k}: shape {arr.shape} != {expect}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

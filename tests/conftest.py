@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benchmarks must see the single real CPU device; only
+launch/dryrun.py (run as its own process) forces 512 host devices."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    from repro.models import ModelConfig
+
+    return ModelConfig(
+        name="tiny-dense",
+        arch_type="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

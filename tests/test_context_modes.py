@@ -1,0 +1,92 @@
+"""Paper-fidelity behaviour tests: the three context modes compared on the
+metrics of Figs. 3/5/7, using the deterministic echo service (analytic cost
+model) so assertions are stable."""
+
+import pytest
+
+from repro.core import ContextMode
+from repro.edge import EchoLLMService, EdgeCluster, LLMClient
+from repro.store import Link
+
+PROMPTS = [
+    "What are the fundamental components of an autonomous mobile robot?",
+    "You mentioned sensors. What are the most common types for obstacle avoidance?",
+    "Can you explain the concept of a PID controller in the context of motor control?",
+    "Write a simple Python function for a proportional controller.",
+    "In your previous code, what do the kp and error variables represent?",
+    "How would you modify that function to include the integral component?",
+    "Now, let's talk about localization. What is SLAM?",
+    "What are some of the main challenges when implementing that on a small robot?",
+    "Can you compare the EKF SLAM and Particle Filter SLAM approaches?",
+]
+NODES = ["n0", "n0", "n1", "n0", "n1", "n0", "n1", "n0", "n1"]
+
+
+def run_mode(mode, replication="full", client_bw=50.0):
+    cluster = EdgeCluster.build(
+        ["n0", "n1"],
+        lambda nid: EchoLLMService(model="m", vocab_size=151936),
+        inter_node_link=Link(latency_ms=2.0, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=5.0, bandwidth_mbps=client_bw),
+        replication=replication,
+    )
+    client = LLMClient(cluster, model="m", mode=mode)
+    rts = []
+    for p, n in zip(PROMPTS, NODES):
+        r = client.chat(p, n)
+        assert r.error is None, r.error
+        rts.append(r.timing.response_time_ms)
+        client.think(400)
+    cluster.converge()
+    return {
+        "rt_median": sorted(rts)[len(rts) // 2],
+        "sync": cluster.sync_bytes(),
+        "client_up": sum(client.request_bytes_log),
+        "req_bytes": client.request_bytes_log,
+    }
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {m: run_mode(m) for m in ContextMode}
+
+
+def test_tokenized_faster_than_raw(results):
+    """Fig. 3: tokenized median response time < raw."""
+    assert results[ContextMode.TOKENIZED]["rt_median"] < results[ContextMode.RAW]["rt_median"]
+
+
+def test_tokenized_syncs_less_than_raw(results):
+    """Fig. 5: tokenized sync bytes < raw (paper: −13.3%/−15%)."""
+    t, r = results[ContextMode.TOKENIZED]["sync"], results[ContextMode.RAW]["sync"]
+    assert t < r
+    assert (r - t) / r > 0.05
+
+
+def test_client_side_request_growth(results):
+    """Fig. 7: client-side request size grows ~linearly; edge-side constant."""
+    cs = results[ContextMode.CLIENT_SIDE]["req_bytes"]
+    tk = results[ContextMode.TOKENIZED]["req_bytes"]
+    assert cs[-1] > cs[0] * 4             # linear-ish growth
+    assert max(tk) < min(cs[3:])          # edge-side stays small
+    # paper: median request size reduced by ~90%
+    red = 1 - sorted(tk)[len(tk) // 2] / sorted(cs)[len(cs) // 2]
+    assert red > 0.5
+
+
+def test_client_side_no_sync(results):
+    assert results[ContextMode.CLIENT_SIDE]["sync"] == 0
+
+
+def test_edge_beats_client_side_on_constrained_uplink():
+    """Fig. 6: with a mobile-grade uplink, edge-side tokenized wins even
+    with handover sync overhead."""
+    edge = run_mode(ContextMode.TOKENIZED, client_bw=4.0)
+    cs = run_mode(ContextMode.CLIENT_SIDE, client_bw=4.0)
+    assert edge["rt_median"] < cs["rt_median"]
+
+
+def test_delta_replication_beats_full():
+    full = run_mode(ContextMode.TOKENIZED, replication="full")
+    delta = run_mode(ContextMode.TOKENIZED, replication="delta")
+    assert delta["sync"] < full["sync"] * 0.7

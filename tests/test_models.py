@@ -1,0 +1,134 @@
+"""Model-zoo correctness: decode-with-cache == full forward, pallas == ref,
+bucketed prefill, VLM/audio specifics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    forward_full,
+    init_params,
+    prefill,
+)
+
+BASE = dict(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+FAMILIES = {
+    "dense": dict(arch_type="dense"),
+    "qkv-bias": dict(arch_type="dense", qkv_bias=True),
+    "moe": dict(arch_type="moe", n_experts=4, top_k=2, capacity_factor=4.0),
+    "gemma": dict(
+        arch_type="dense", layer_pattern="local_global", sliding_window=16,
+        attn_softcap=50.0, logit_softcap=30.0, mlp_type="geglu",
+    ),
+    "sw-variant": dict(arch_type="dense", attn_variant="sliding_window", sliding_window=16),
+    "mamba": dict(
+        arch_type="ssm", ssm_state=16, ssm_head_dim=32, ssm_chunk=4,
+        n_heads=0, n_kv_heads=0, d_ff=0,
+    ),
+    "zamba": dict(
+        arch_type="hybrid", layer_pattern="zamba_hybrid", shared_attn_period=2,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=4, n_layers=5,
+    ),
+    "chatglm": dict(arch_type="dense", rope_style="chatglm2d"),
+    "relu2": dict(arch_type="dense", mlp_type="relu2"),
+}
+
+
+def make_cfg(name):
+    kw = {**BASE, **FAMILIES[name]}
+    return ModelConfig(name=name, **kw)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_decode_matches_forward(family):
+    cfg = make_cfg(family)
+    B, S = 2, 24
+    params = init_params(jax.random.key(1), cfg)
+    toks = jax.random.randint(jax.random.key(2), (B, S + 4), 0, cfg.vocab_size)
+    logits_full, _ = forward_full(params, cfg, toks)
+    lg, caches, pos = prefill(params, cfg, toks[:, :S], max_len=S + 8)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_full[:, S - 1]), rtol=3e-4, atol=3e-4
+    )
+    for i in range(4):
+        lg2, caches = decode_step(params, cfg, caches, toks[:, S + i : S + i + 1], pos)
+        np.testing.assert_allclose(
+            np.asarray(lg2[:, 0]), np.asarray(logits_full[:, S + i]),
+            rtol=5e-4, atol=5e-4,
+        )
+        pos = pos + 1
+
+
+def test_bucketed_prefill_matches_exact():
+    cfg = make_cfg("dense")
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 20), 0, cfg.vocab_size)
+    lg_exact, _, pos_e = prefill(params, cfg, toks, max_len=64)
+    padded = jnp.pad(toks, [(0, 0), (0, 12)])
+    lg_bucket, caches, pos_b = prefill(
+        params, cfg, padded, max_len=64, true_len=jnp.array([20], jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(lg_bucket), np.asarray(lg_exact), rtol=1e-5, atol=1e-5)
+    assert int(pos_b[0]) == 20
+
+
+def test_vlm_patch_embeds_change_output():
+    cfg = ModelConfig(
+        name="vlm", arch_type="vlm", rope_style="mrope", mrope_sections=(2, 3, 3),
+        n_patches=8, **BASE,
+    )
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 32), 0, cfg.vocab_size)
+    pe1 = jnp.zeros((1, 8, cfg.d_model))
+    pe2 = jnp.ones((1, 8, cfg.d_model))
+    l1, _ = forward_full(params, cfg, toks, patch_embeds=pe1)
+    l2, _ = forward_full(params, cfg, toks, patch_embeds=pe2)
+    assert not bool(jnp.allclose(l1, l2))
+
+
+def test_audio_codebook_logits_shape():
+    cfg = ModelConfig(name="audio", arch_type="audio", n_codebooks=4, **BASE)
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 16, 4), 0, cfg.vocab_size)
+    logits, _ = forward_full(params, cfg, toks)
+    assert logits.shape == (2, 16, 4, cfg.vocab_size)
+
+
+def test_sliding_window_limits_attention():
+    """With window W, logits at position p must not depend on tokens < p-W."""
+    cfg = make_cfg("sw-variant")
+    params = init_params(jax.random.key(0), cfg)
+    t1 = jax.random.randint(jax.random.key(1), (1, 48), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0:8].set((t1[:, 0:8] + 7) % cfg.vocab_size)  # differ only early
+    l1, _ = forward_full(params, cfg, t1)
+    l2, _ = forward_full(params, cfg, t2)
+    # last position attends only to the trailing 16 tokens ... but early tokens
+    # propagate through layer stacking (2 layers x window 16 reach = 32 < 40)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, -1]), np.asarray(l2[:, -1]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_moe_router_balance_loss_positive():
+    cfg = make_cfg("moe")
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    _, aux = forward_full(params, cfg, toks)
+    assert float(aux) > 0.0
+
+
+def test_remat_matches_no_remat():
+    cfg = make_cfg("dense")
+    cfg_nr = cfg.replace(remat=False)
+    params = init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 16), 0, cfg.vocab_size)
+    l1, _ = forward_full(params, cfg, toks)
+    l2, _ = forward_full(params, cfg_nr, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,107 @@
+"""Unit tests for the sharding rules — every assigned arch gets a complete,
+divisibility-correct PartitionSpec tree (these run on 1 device: specs are
+pure metadata)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import abstract_params
+from repro.models.pjit_rules import attention_weights_replicated, rules_for
+from repro.launch.sharding import (
+    batch_specs,
+    fsdp_param_specs,
+    opt_state_specs,
+    param_specs,
+)
+
+MODEL = 16
+ARCHS = sorted(ASSIGNED)
+
+
+def _check_divisible(spec: P, shape, where=""):
+    for axis_name, dim in zip(tuple(spec) + (None,) * (len(shape) - len(spec)), shape):
+        if axis_name is None:
+            continue
+        names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        total = 1
+        for n in names:
+            total *= {"pod": 2, "data": 16, "model": 16}[n]
+        assert dim % total == 0, f"{where}: dim {dim} not divisible by {total}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_complete_and_divisible(arch):
+    cfg = get_config(arch)
+    abs_p = abstract_params(cfg)
+    specs = param_specs(cfg, abs_p, MODEL)
+    leaves_p = jax.tree.leaves(abs_p)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for leaf, spec in zip(leaves_p, leaves_s):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim
+        _check_divisible(spec, leaf.shape, where=f"{arch}")
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b", "nemotron-4-340b"])
+def test_fsdp_never_shards_stack_dim(arch):
+    """Regression for the 250 GB scan-accumulator bug (EXPERIMENTS §Perf B)."""
+    cfg = get_config(arch)
+    abs_p = abstract_params(cfg)
+    specs = fsdp_param_specs(cfg, abs_p, MODEL)
+    for (path, leaf), spec in zip(
+        jax.tree_util.tree_flatten_with_path(abs_p)[0],
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        keys = [getattr(p, "key", None) for p in path]
+        if "groups" in str(keys) and leaf.ndim >= 3:
+            parts = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+            assert parts[0] != "data", (keys, spec)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_opt_specs_shard_more_than_params(arch):
+    cfg = get_config(arch)
+    abs_p = abstract_params(cfg)
+    opt_abs = {
+        "m": abs_p, "v": abs_p,
+        "step": jax.ShapeDtypeStruct((), jax.numpy.int32),
+    }
+    ospecs = opt_state_specs(cfg, opt_abs, MODEL, zero1=True)
+    n_data = sum(
+        1 for s in jax.tree.leaves(ospecs["m"], is_leaf=lambda x: isinstance(x, P))
+        if "data" in str(s)
+    )
+    assert n_data > 0  # ZeRO-1 actually bites
+
+
+def test_attention_replication_rule():
+    assert attention_weights_replicated(get_config("qwen2-0.5b"))      # 14 heads
+    assert attention_weights_replicated(get_config("qwen2-vl-7b"))     # 28
+    assert not attention_weights_replicated(get_config("gemma2-27b"))  # 32
+    assert not attention_weights_replicated(get_config("nemotron-4-340b"))  # 96
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("kind", ["train", "decode"])
+def test_rules_consistent(arch, kind):
+    cfg = get_config(arch)
+    rules = rules_for(cfg, multi_pod=True, kind=kind)
+    assert rules["batch"] == ("pod", "data")
+    if kind == "decode":
+        assert rules["seq"] is None  # can't shard a length-1 query
+    if cfg.n_heads and cfg.n_heads % 16 == 0:
+        assert rules["heads"] == "model"
+
+
+@pytest.mark.parametrize("arch", ["musicgen-medium", "qwen2-vl-7b", "qwen2-0.5b"])
+def test_batch_specs_shapes(arch):
+    cfg = get_config(arch)
+    bs = batch_specs(cfg, multi_pod=False, kind="train")
+    assert "tokens" in bs and "labels" in bs
+    if cfg.n_patches:
+        assert "patch_embeds" in bs
+    want_rank = 3 if cfg.n_codebooks > 1 else 2
+    assert len(bs["tokens"]) == want_rank

@@ -1,0 +1,140 @@
+"""Distributed KV store + network simulator tests."""
+
+import pytest
+
+from repro.store import DistributedKVStore, Link, Network, SYNC_TAG
+from repro.core.tokens import TokenizedContext
+from repro.tokenizer import get_tokenizer
+
+
+def make_store(replication="full", latency=2.0, bw=100.0):
+    net = Network(default_link=Link(latency_ms=latency, bandwidth_mbps=bw))
+    store = DistributedKVStore(net, replication=replication)
+    tok = get_tokenizer(32000, seed=0)
+    store.create_keygroup(
+        "m", ["a", "b", "c"],
+        size_fn=lambda v: v.wire_bytes(tok),
+        delta_size_fn=lambda v, since: v.delta_wire_bytes(tok, since),
+        ttl_ms=None,
+    )
+    return net, store, tok
+
+
+def ctx_with_turns(tok, n_turns, model="m"):
+    ctx = TokenizedContext(model=model)
+    for i in range(n_turns):
+        ctx.extend(tok.encode(f"turn {i} about robot sensors and maps"))
+        ctx.commit_turn()
+    return ctx
+
+
+def test_local_write_visible_immediately():
+    net, store, tok = make_store()
+    ctx = ctx_with_turns(tok, 1)
+    store.put("a", "m", "k1", ctx, version=1)
+    vv = store.get("a", "m", "k1")
+    assert vv is not None and vv.version == 1
+
+
+def test_replication_arrives_after_latency():
+    net, store, tok = make_store(latency=5.0)
+    ctx = ctx_with_turns(tok, 1)
+    store.put("a", "m", "k1", ctx, version=1)
+    assert store.get("b", "m", "k1") is None          # not yet
+    net.advance(100.0)
+    vv = store.get("b", "m", "k1")
+    assert vv is not None and vv.version == 1
+
+
+def test_larger_values_take_longer():
+    net, store, tok = make_store(latency=1.0, bw=1.0)  # 1 Mbps: size matters
+    small = ctx_with_turns(tok, 1)
+    big = ctx_with_turns(tok, 50)
+    t_small = store.put("a", "m", "s", small, 1)["b"]
+    t_big = store.put("a", "m", "b1", big, 1)["b"]
+    assert t_big > t_small
+
+
+def test_last_writer_wins_on_version():
+    net, store, tok = make_store()
+    store.put("a", "m", "k", ctx_with_turns(tok, 2), version=2)
+    net.run_until_quiet()
+    # stale version arriving later must not overwrite
+    replica_b = store.replica("b", "m")
+    from repro.store.kvstore import VersionedValue
+
+    applied = replica_b.apply_replicated(
+        "k", VersionedValue(ctx_with_turns(tok, 1), 1, 0.0)
+    )
+    assert not applied
+    assert store.get("b", "m", "k").version == 2
+
+
+def test_ttl_expiry():
+    net = Network()
+    store = DistributedKVStore(net)
+    store.create_keygroup("m", ["a"], ttl_ms=100.0)
+    store.put("a", "m", "k", "value", 1)
+    net.advance(50.0)
+    assert store.get("a", "m", "k") is not None
+    net.advance(100.0)
+    assert store.get("a", "m", "k") is None
+
+
+def test_delete_propagates():
+    net, store, tok = make_store()
+    store.put("a", "m", "k", ctx_with_turns(tok, 1), 1)
+    net.run_until_quiet()
+    store.delete("b", "m", "k")
+    net.run_until_quiet()
+    for n in ("a", "b", "c"):
+        assert store.get(n, "m", "k") is None
+
+
+def test_sync_bytes_accounting():
+    net, store, tok = make_store()
+    ctx = ctx_with_turns(tok, 3)
+    store.put("a", "m", "k", ctx, 3)
+    expected_payload = ctx.wire_bytes(tok)
+    # 2 peers, payload + per-message overhead each
+    assert store.sync_bytes() == 2 * (expected_payload + 66)
+    assert store.sync_messages() == 2
+
+
+def test_delta_replication_smaller_than_full():
+    net_f, store_f, tok = make_store("full")
+    net_d, store_d, _ = make_store("delta")
+    ctx_f = ctx_with_turns(tok, 0)
+    ctx_d = ctx_with_turns(tok, 0)
+    sentence = (
+        "a longer conversation turn about particle filter localization, "
+        "grid maps, battery budgets and planning on low power robots " * 3
+    )
+    for i in range(8):
+        for ctx, store in ((ctx_f, store_f), (ctx_d, store_d)):
+            ctx.extend(tok.encode(f"turn {i}: {sentence}"))
+            ctx.commit_turn()
+            store.put("a", "m", "k", ctx, ctx.turn)
+    assert store_d.sync_bytes() < store_f.sync_bytes() * 0.6
+
+
+def test_tokenized_syncs_fewer_bytes_than_raw():
+    """Core paper claim (Fig. 5), at the store level."""
+    from repro.core.tokens import RawContext
+
+    tok = get_tokenizer(32000, seed=0)
+    text = "What are the fundamental components of an autonomous mobile robot? " * 5
+    tctx, rctx = TokenizedContext(), RawContext()
+    tctx.extend(tok.encode(text)); tctx.commit_turn()
+    rctx.extend(text); rctx.commit_turn()
+    assert tctx.wire_bytes(tok) < rctx.wire_bytes()
+
+
+def test_event_ordering_is_stable():
+    net = Network()
+    seen = []
+    net.schedule(5.0, lambda: seen.append("a"))
+    net.schedule(5.0, lambda: seen.append("b"))
+    net.schedule(1.0, lambda: seen.append("c"))
+    net.run_until_quiet()
+    assert seen == ["c", "a", "b"]

@@ -1,0 +1,111 @@
+"""End-to-end system behaviour: the paper's full scenario on the real JAX
+engine — 9-turn conversation, node switches at turns 3/5/7, all metrics."""
+
+import pytest
+
+from repro.core import ContextMode
+from repro.edge import EdgeCluster, LLMClient
+from repro.models import ModelConfig
+from repro.serving import JaxLLMService
+from repro.store import Link
+
+PROMPTS = [
+    "What are the fundamental components of an autonomous mobile robot?",
+    "You mentioned sensors. What are the most common types for obstacle avoidance?",
+    "Can you explain the concept of a PID controller in the context of motor control?",
+    "Write a simple Python function for a proportional controller.",
+    "In your previous code, what do the kp and error variables represent?",
+    "How would you modify that function to include the integral component?",
+    "Now, let's talk about localization. What is SLAM?",
+    "What are some of the main challenges when implementing that on a small robot?",
+    "Can you compare the EKF SLAM and Particle Filter SLAM approaches?",
+]
+# paper Fig. 6: the client switches nodes on turns 3, 5 and 7
+NODES = ["m2", "m2", "tx2", "tx2", "m2", "m2", "tx2", "tx2", "m2"]
+
+
+@pytest.fixture(scope="module")
+def shared_service():
+    cfg = ModelConfig(
+        name="paper-mini", arch_type="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=8192,
+        qkv_bias=True, tie_embeddings=True,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    return JaxLLMService.create("paper-mini", cfg, max_len=2048)
+
+
+def run_scenario(service, mode):
+    cluster = EdgeCluster.build(
+        ["m2", "tx2"],
+        lambda nid: service,
+        inter_node_link=Link(latency_ms=2.0, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=5.0, bandwidth_mbps=20.0),
+    )
+    client = LLMClient(cluster, model="paper-mini", mode=mode, max_new_tokens=16)
+    resps = []
+    for p, n in zip(PROMPTS, NODES):
+        r = client.chat(p, n)
+        assert r.error is None, r.error
+        resps.append(r)
+        client.think(500)
+    cluster.converge()
+    return cluster, client, resps
+
+
+def test_nine_turn_scenario_tokenized(shared_service):
+    cluster, client, resps = run_scenario(shared_service, ContextMode.TOKENIZED)
+    assert [r.turn for r in resps] == list(range(1, 10))
+    ctx = [r.n_context_tokens for r in resps]
+    assert ctx == sorted(ctx) and ctx[0] == 0 and ctx[-1] > 100
+    assert cluster.sync_bytes() > 0
+    # constant-size requests (Fig. 7): no growth with history
+    assert max(client.request_bytes_log) < 400
+
+
+def test_nine_turn_scenario_consistency_across_switches(shared_service):
+    """After each switch, the model's answer must still be conditioned on
+    the full prior context — compare against a never-switching run."""
+    _, _, roaming = run_scenario(shared_service, ContextMode.TOKENIZED)
+
+    cluster = EdgeCluster.build(["m2", "tx2"], lambda nid: shared_service)
+    stay = LLMClient(cluster, model="paper-mini", mode=ContextMode.TOKENIZED,
+                     max_new_tokens=16)
+    static = []
+    for p in PROMPTS:
+        r = stay.chat(p, "m2")
+        static.append(r)
+        stay.think(500)
+    # identical greedy model + identical context => identical responses,
+    # regardless of which node served the request
+    assert [r.text for r in roaming] == [r.text for r in static]
+
+
+def test_client_side_equivalence_first_turn(shared_service):
+    """With identical (empty) context, mode must not change the generation.
+
+    Later turns can diverge textually with a random-weights model because
+    raw/client-side modes re-render the assistant reply from decoded text
+    while tokenized mode stores the generated ids verbatim (a real trained
+    model's output re-encodes canonically; random ids need not) — so exact
+    multi-turn equality is only asserted turn 1; context-dependence is
+    covered by test_nine_turn_scenario_consistency_across_switches."""
+    _, _, edge = run_scenario(shared_service, ContextMode.TOKENIZED)
+    _, _, cs = run_scenario(shared_service, ContextMode.CLIENT_SIDE)
+    assert edge[0].text == cs[0].text
+    # both modes keep growing conversation state
+    assert cs[-1].n_prompt_tokens > cs[0].n_prompt_tokens
+
+
+def test_raw_mode_tokenize_cost_dominates(shared_service):
+    """Raw mode re-tokenizes the whole history each turn: its per-turn
+    tokenize time must exceed tokenized mode's (which only encodes the new
+    prompt) — the mechanical basis of the paper's Fig. 3."""
+    _, _, tok = run_scenario(shared_service, ContextMode.TOKENIZED)
+    _, _, raw = run_scenario(shared_service, ContextMode.RAW)
+    assert tok[0].text == raw[0].text
+    t_tok = sum(r.timing.tokenize_ms for r in tok[4:])
+    t_raw = sum(r.timing.tokenize_ms for r in raw[4:])
+    assert t_raw > t_tok
+    # raw context grows (chars) and is re-tokenized into the prompt
+    assert raw[-1].n_prompt_tokens > tok[-1].n_prompt_tokens * 0.5

@@ -1,0 +1,96 @@
+"""Tokenizer substrate tests: determinism, roundtrip, wire formats."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.tokenizer import (
+    ByteLevelBPE,
+    IM_END,
+    IM_START,
+    NL,
+    encode_conversation,
+    encode_turn,
+    get_tokenizer,
+    render_conversation,
+)
+
+TEXT = st.text(
+    alphabet=st.characters(codec="utf-8", exclude_characters="\x00"),
+    max_size=200,
+)
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return get_tokenizer(65536, seed=3)
+
+
+def test_roundtrip_simple(tok):
+    s = "What are the fundamental components of an autonomous mobile robot?"
+    assert tok.decode(tok.encode(s)) == s
+
+
+@settings(max_examples=80, deadline=None)
+@given(TEXT)
+def test_roundtrip_property(s):
+    tok = get_tokenizer(65536, seed=3)
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_deterministic_across_instances():
+    a = ByteLevelBPE(vocab_size=2048, seed=9)
+    b = ByteLevelBPE(vocab_size=2048, seed=9)
+    s = "sensor fusion with particle filters"
+    assert a.encode(s) == b.encode(s)
+
+
+def test_different_seeds_differ():
+    a = ByteLevelBPE(vocab_size=65536, seed=1)
+    b = ByteLevelBPE(vocab_size=65536, seed=2)
+    s = "the robot sensor controller state estimation"
+    assert a.encode(s) != b.encode(s)
+
+
+def test_ids_below_vocab(tok):
+    ids = tok.encode("control systems for autonomous robots " * 20)
+    assert max(ids) < tok.vocab_size
+
+
+def test_token_serialization_roundtrip(tok):
+    ids = tok.encode("distributed context management at the edge")
+    raw = tok.serialize_tokens(ids)
+    assert tok.deserialize_tokens(raw) == ids
+    assert len(raw) == len(ids) * tok.token_nbytes
+
+
+def test_tight_token_packing():
+    assert get_tokenizer(32000, seed=0).token_nbytes == 2
+    assert get_tokenizer(151936, seed=0).token_nbytes == 3   # fits 2^24
+    assert get_tokenizer(256000, seed=0).token_nbytes == 3
+    big = get_tokenizer(151936, seed=0)
+    ids = big.encode("pack me tightly " * 10)
+    assert big.deserialize_tokens(big.serialize_tokens(ids)) == ids
+
+
+def test_chat_template_structure(tok):
+    ids = encode_turn(tok, "user", "hello")
+    assert ids[0] == IM_START and IM_END in ids and ids[-1] == NL
+    conv = encode_conversation(tok, [("user", "a"), ("assistant", "b")])
+    assert conv.count(IM_START) == 2
+
+
+def test_encode_cost_linear(tok):
+    """Raw-mode re-tokenization cost must grow with history length —
+    the mechanical basis of the paper's Fig. 3 effect."""
+    import time
+
+    base = "context token latency bandwidth storage replica turn counter "
+    tok._word_cache.clear()
+    t0 = time.perf_counter()
+    tok.encode(base * 50)
+    t_small = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tok.encode(base * 2000)
+    t_big = time.perf_counter() - t0
+    assert t_big > t_small * 5  # superlinear headroom over 40x input
