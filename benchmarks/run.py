@@ -15,6 +15,7 @@ def main() -> None:
     from .kernel_bench import kernel_microbench
     from .paper_figures import ALL_FIGURES
     from .roofline_table import roofline_table
+    from .session_bench import session_kv_bench
 
     wanted = [a.lower() for a in sys.argv[1:]]
     rows = []
@@ -24,7 +25,7 @@ def main() -> None:
         print(f"{name},{us_per_call:.3f},{derived}")
 
     print("name,us_per_call,derived")
-    benches = ALL_FIGURES + [kernel_microbench, roofline_table]
+    benches = ALL_FIGURES + [kernel_microbench, roofline_table, session_kv_bench]
     for bench in benches:
         tag = bench.__name__
         if wanted and not any(tag.startswith(w) or w in tag for w in wanted):

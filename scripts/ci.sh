@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI gate: fast inner loop first (everything not marked `slow` — sub-minute),
+# then the repo's tier-1 verify (the full suite). Usage:
+#   scripts/ci.sh            # fast gate + full tier-1
+#   scripts/ci.sh --fast     # fast gate only (the builder's inner loop)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast gate: pytest -q -m 'not slow' =="
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exit 0
+fi
+
+echo "== full tier-1: pytest -x -q =="
+python -m pytest -x -q

@@ -12,7 +12,13 @@ Service. It owns the context lifecycle:
   history; in CLIENT_SIDE mode it forwards the client-shipped history
   untouched (to the LLM Service, raw and client-side are identical — §4.1);
 - updates the stored context *asynchronously after* the response is sent,
-  so the update never sits on the client-observable path (§4.1/§4.2.1).
+  so the update never sits on the client-observable path (§4.1/§4.2.1);
+- passes the session's context key to the LLM Service as ``cache_key``, so
+  engines with a session-level KV cache (repro.serving.engine) can reuse
+  the KV state of the stored token prefix and prefill only the new tokens
+  — the paper's "store tokenized" idea extended one level down the stack.
+  Per-request reuse accounting lands in ``Timing`` (kv_cache_hit,
+  kv_reused_tokens, prefill_tokens).
 """
 
 from __future__ import annotations
@@ -50,7 +56,11 @@ class LLMServiceProtocol(Protocol):
     tokenizer: ByteLevelBPE
 
     def completion(
-        self, context_ids: List[int], prompt_ids: List[int], max_new_tokens: int
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
     ) -> "ServiceResult": ...
 
 
@@ -59,6 +69,12 @@ class ServiceResult:
     text: str
     token_ids: List[int]
     inference_ms: float
+    # Session-level KV-cache reuse accounting (engines without a session
+    # cache leave the defaults).
+    cache_hit: bool = False
+    reused_tokens: int = 0
+    prefill_tokens: int = 0
+    cache_update_ms: float = 0.0
 
 
 @dataclass
@@ -156,12 +172,20 @@ class ContextManager:
         # Clock discipline: tokenize + read time pass on the sim clock.
         net.advance(timing.tokenize_ms)
 
+        # The session's context key doubles as the LLM Service's KV-cache
+        # key: services with a session cache (repro.serving.engine) reuse
+        # the KV state of the stored token prefix and prefill only the new
+        # tokens — correctness is guarded by the service's prefix match.
         result = self.service.completion(
             context_ids=context_ids,
             prompt_ids=prompt_ids,
             max_new_tokens=req.max_new_tokens,
+            cache_key=key,
         )
         timing.inference_ms = result.inference_ms
+        timing.kv_cache_hit = result.cache_hit
+        timing.kv_reused_tokens = result.reused_tokens
+        timing.prefill_tokens = result.prefill_tokens
         net.advance(result.inference_ms)
 
         n_ctx = len(context_ids) if req.mode is ContextMode.TOKENIZED else 0

@@ -64,6 +64,12 @@ class Timing:
     network_down_ms: float = 0.0
     async_update_ms: float = 0.0   # context write; NOT on the response path
     retries: int = 0
+    # Session-level KV-cache reuse (repro.serving.session_cache): did this
+    # turn hit the session's cached KV prefix, how many prefix tokens were
+    # reused, and how many tokens were actually prefilled.
+    kv_cache_hit: bool = False
+    kv_reused_tokens: int = 0
+    prefill_tokens: int = 0
 
     @property
     def response_time_ms(self) -> float:

@@ -54,7 +54,11 @@ class EchoLLMService:
         )
 
     def completion(
-        self, context_ids: List[int], prompt_ids: List[int], max_new_tokens: int
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: object = None,  # KV reuse: analytic model has no KV state
     ) -> ServiceResult:
         all_ids = list(context_ids) + list(prompt_ids)
         n_gen = min(self.n_generate, max_new_tokens)

@@ -7,7 +7,7 @@ from .transformer import (
     layer_groups,
     make_decode_caches,
 )
-from .prefill import prefill
+from .prefill import prefill, prefill_append, supports_append
 
 __all__ = [
     "ModelConfig",
@@ -18,4 +18,6 @@ __all__ = [
     "layer_groups",
     "make_decode_caches",
     "prefill",
+    "prefill_append",
+    "supports_append",
 ]

@@ -161,6 +161,41 @@ def attention_decode(
     return out @ p["wo"]
 
 
+def attention_append(
+    p: Params,
+    x: jnp.ndarray,              # (B,S,D) — a chunk of new tokens
+    positions: jnp.ndarray,      # (B,S) or (3,B,S) absolute positions
+    k_cache: jnp.ndarray,        # (B,T,KV,Dh) full cache (slot == position)
+    v_cache: jnp.ndarray,
+    kv_pos: jnp.ndarray,         # (B,T) — already updated for this chunk
+    cfg: ModelConfig,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-token decode: S new tokens mid-sequence attend against a full
+    KV cache holding the prior prefix. The chunk's rotated K/V are scattered
+    into the cache at their absolute positions *before* attention, so
+    intra-chunk causality falls out of the shared position-based mask.
+    Returns (attn output, new k_cache, new v_cache)."""
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    b, s, _ = x.shape
+    q, k, v = qkv_project(p, x, positions, cfg)
+    bidx = jnp.arange(b)[:, None]
+    ck = k_cache.at[bidx, pos1d].set(k.astype(k_cache.dtype), mode="drop")
+    cv = v_cache.at[bidx, pos1d].set(v.astype(v_cache.dtype), mode="drop")
+    kv_valid = kv_pos >= 0
+    if cfg.attn_impl == "pallas":
+        from ..kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(
+            q, ck, cv, pos1d, kv_pos, kv_valid,
+            window=window, softcap=cfg.attn_softcap,
+        )
+    else:
+        out = _sdpa_reference(q, ck, cv, pos1d, kv_pos, kv_valid, cfg, window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+    return out, ck, cv
+
+
 def project_kv_step(
     p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:

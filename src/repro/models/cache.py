@@ -75,6 +75,33 @@ def update_kv_pos(kv_pos: jnp.ndarray, pos: jnp.ndarray, ring: bool) -> jnp.ndar
     return kv_pos.at[jnp.arange(b), slot].set(pos)
 
 
+def append_kv_pos(
+    kv_pos: jnp.ndarray,   # (B, T) existing slot positions (full cache)
+    q_pos: jnp.ndarray,    # (B, S) absolute positions of the appended chunk
+    valid: jnp.ndarray,    # (B, S) bool — False for bucket padding
+) -> jnp.ndarray:
+    """kv_pos after appending a token chunk into a *full* cache, where slot
+    index == absolute position. Padded chunk positions write -1 (kept
+    invalid); out-of-range slots are dropped."""
+    b = kv_pos.shape[0]
+    bidx = jnp.arange(b)[:, None]
+    vals = jnp.where(valid, q_pos, -1).astype(jnp.int32)
+    return kv_pos.at[bidx, q_pos].set(vals, mode="drop")
+
+
+def trim_kv_pos(kv_pos: jnp.ndarray, n_valid) -> jnp.ndarray:
+    """Invalidate every slot at index >= n_valid (full cache: slot == pos).
+
+    Used when storing caches in the session pool: decode may have run past a
+    stop token (device-side stop scan syncs every k tokens), so slots beyond
+    the kept prefix hold K/V of discarded tokens and must be masked out."""
+    t = kv_pos.shape[1]
+    j = jnp.arange(t, dtype=jnp.int32)
+    n = jnp.asarray(n_valid, jnp.int32)
+    keep = j[None, :] < (n[:, None] if n.ndim == 1 else n)
+    return jnp.where(keep, kv_pos, -1)
+
+
 def prefill_kv_pos(batch: int, slots: int, seq_len: int, ring: bool) -> jnp.ndarray:
     """kv_pos after prefilling seq_len tokens into a cache with `slots` slots."""
     j = jnp.arange(slots)

@@ -12,8 +12,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_forward
-from .cache import Cache, prefill_kv_pos, ring_from_prefill
+from .attention import attention_append, attention_forward
+from .cache import Cache, append_kv_pos, prefill_kv_pos, ring_from_prefill
 from .config import ModelConfig
 from .layers import dtype_of, embed_tokens, mlp_forward, rms_norm, unembed
 from .moe import moe_forward
@@ -188,3 +188,92 @@ def prefill(
     logits = unembed(params["embed"], x[:, -1:, :], cfg)
     next_pos = jnp.full((b,), s, dtype=jnp.int32)
     return logits[:, 0], caches, next_pos
+
+
+# ---------------------------------------------------------------------------
+# Incremental (chunked) prefill — session-level KV-cache reuse
+# ---------------------------------------------------------------------------
+
+def _dense_block_append(bp, x, positions, ck, cv, kv_pos, cfg, window):
+    h, nk, nv = attention_append(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions,
+        ck, cv, kv_pos, cfg, window=window,
+    )
+    x = x + h
+    x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x, nk, nv
+
+
+def _moe_block_append(bp, x, positions, ck, cv, kv_pos, cfg, window):
+    h, nk, nv = attention_append(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions,
+        ck, cv, kv_pos, cfg, window=window,
+    )
+    x = x + h
+    m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x + m, nk, nv
+
+
+def supports_append(cfg: ModelConfig) -> bool:
+    """Incremental prefill is implemented for full-cache dense/moe/vlm
+    groups (slot == absolute position). Ring/SSM/hybrid state cannot be
+    extended in place the same way yet."""
+    return cfg.attn_variant == "full" and all(
+        spec.kind in ("dense", "moe") for spec in layer_groups(cfg)
+    )
+
+
+def prefill_append(
+    params: Params,
+    cfg: ModelConfig,
+    caches: List[Cache],
+    tokens: jnp.ndarray,                       # (B,S) new-token chunk
+    p0: jnp.ndarray,                           # (B,) absolute start offset
+    true_len: Optional[jnp.ndarray] = None,    # (B,) real chunk lengths
+) -> Tuple[jnp.ndarray, List[Cache], jnp.ndarray]:
+    """Prefill a token chunk starting at position offset ``p0`` into
+    *existing* caches: K/V land in slots ``[p0, p0+n)``, ``kv_pos`` is
+    extended, and the chunk attends against every prior valid slot — so a
+    returning session only computes its new tokens (O(new) not O(history)).
+
+    Same contract as :func:`prefill`: returns (last-valid-position logits
+    (B,V), new caches, next_pos (B,)). With ``true_len`` the chunk is
+    right-padded to a bucket length; padded positions write ``kv_pos = -1``
+    and are overwritten by the next chunk. Supported for full-cache
+    dense/moe groups only (see :func:`supports_append`)."""
+    assert supports_append(cfg), (
+        "prefill_append requires full-cache dense/moe groups "
+        f"(arch={cfg.arch_type}, attn_variant={cfg.attn_variant})"
+    )
+    b, s = tokens.shape[0], tokens.shape[1]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    q_pos = p0[:, None].astype(jnp.int32) + idx[None, :]          # (B,S)
+    valid = (
+        idx[None, :] < true_len[:, None] if true_len is not None
+        else jnp.ones((b, s), dtype=bool)
+    )
+    positions = (
+        jnp.broadcast_to(q_pos, (3, b, s)) if cfg.rope_style == "mrope" else q_pos
+    )
+    x = embed_tokens(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
+
+    new_caches: List[Cache] = []
+    for spec, gp, cache in zip(layer_groups(cfg), params["groups"], caches):
+        assert spec.kind in ("dense", "moe"), spec.kind
+        kv_pos = append_kv_pos(cache["kv_pos"], q_pos, valid)
+        w = cfg.window_for_layer(0)
+        block = _dense_block_append if spec.kind == "dense" else _moe_block_append
+
+        def body(x, scanned, _block=block, _w=w, _kv=kv_pos):
+            bp, ck, cv = scanned
+            x, nk, nv = _block(bp, x, positions, ck, cv, _kv, cfg, _w)
+            return x, (nk, nv)
+
+        x, (nk, nv) = scan_or_unroll(body, x, (gp, cache["k"], cache["v"]), cfg)
+        new_caches.append({"k": nk, "v": nv, "kv_pos": kv_pos})
+
+    n_new = true_len if true_len is not None else jnp.full((b,), s, jnp.int32)
+    last = x[jnp.arange(b), n_new - 1][:, None, :]
+    logits = unembed(params["embed"], last, cfg)
+    next_pos = (p0 + n_new).astype(jnp.int32)
+    return logits[:, 0], new_caches, next_pos

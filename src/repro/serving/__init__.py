@@ -1,11 +1,15 @@
-from .engine import InferenceEngine, JaxLLMService
+from .engine import GenerateResult, InferenceEngine, JaxLLMService
 from .sampling import sample
 from .scheduler import BatchedServer, FinishedRequest
+from .session_cache import CacheEntry, SessionCachePool
 
 __all__ = [
+    "CacheEntry",
+    "GenerateResult",
     "InferenceEngine",
     "JaxLLMService",
     "sample",
     "BatchedServer",
     "FinishedRequest",
+    "SessionCachePool",
 ]

@@ -5,9 +5,30 @@ entry point takes a *pre-tokenized context* plus prompt token ids, so stored
 session history is never re-tokenized. Greedy decoding, temperature 0,
 max 128 new tokens — the paper's settings.
 
+Two serving-path optimizations extend the paper's idea down the stack:
+
+- **Session-level KV-cache reuse** — the decode caches of each served turn
+  are kept in a capacity-bounded LRU :class:`SessionCachePool` keyed by the
+  request's ``cache_key`` (the session's context key). A returning turn
+  longest-common-prefix matches its ``context_ids + prompt_ids`` against the
+  cached token prefix, reuses the matching KV state, and *incrementally*
+  prefills only the new-token suffix in bounded chunks
+  (:func:`repro.models.prefill_append`) — per-turn prefill cost is O(new
+  tokens), not O(history). Any prefix mismatch (stale replica, edited
+  history) falls back to a full prefill, so reuse is never required for
+  correctness. The pool update happens after generation, off the measured
+  hot path — mirroring the paper's asynchronous context update (§4.2.1).
+- **Batched host sync in decode** — the decode loop keeps sampled tokens on
+  device and only syncs to the host every ``sync_every`` steps (one transfer
+  for the whole window), scanning the window for stop tokens host-side; at
+  most ``sync_every - 1`` speculative decode steps are discarded after a
+  stop. This removes the per-token blocking ``int(tok)`` round-trip.
+
 Prompt lengths are bucketed (multiples of ``bucket``) so the jitted prefill
 compiles once per bucket, not per request; padded positions are masked via
-``true_len``. The decode loop reuses one jitted step with donated caches.
+``true_len``. Append chunks are likewise bucketed and capped at
+``append_chunk`` slots so jit compiles stay bounded. The decode loop reuses
+one jitted step with donated caches.
 """
 
 from __future__ import annotations
@@ -22,13 +43,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.manager import ServiceResult
-from ..models import ModelConfig, decode_step, init_params, prefill
+from ..models import (
+    ModelConfig,
+    decode_step,
+    init_params,
+    prefill,
+    prefill_append,
+    supports_append,
+)
+from ..models.cache import trim_kv_pos
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
 from .sampling import sample
+from .session_cache import CacheEntry, SessionCachePool
 
 
 def _bucket(n: int, step: int) -> int:
     return max(step, ((n + step - 1) // step) * step)
+
+
+@dataclass
+class GenerateResult:
+    """Outcome of one generation, with KV-reuse accounting."""
+
+    token_ids: List[int]
+    cache_hit: bool = False
+    reused_tokens: int = 0       # prefix tokens served from the session cache
+    prefill_tokens: int = 0      # tokens actually prefilled this turn
+    inference_ms: float = 0.0    # hot path: prefill + decode (pool update excluded)
+    cache_update_ms: float = 0.0  # session-pool update, off the hot path
 
 
 @dataclass
@@ -37,17 +79,34 @@ class InferenceEngine:
     params: Dict
     max_len: int = 1024          # cache slots (context + generation budget)
     bucket: int = 64
+    append_chunk: int = 256      # max incremental-prefill chunk (bucket multiple)
+    sync_every: int = 8          # decode steps between host syncs / stop scans
     stop_tokens: Tuple[int, ...] = (EOS, IM_END)
+    session_pool: Optional[SessionCachePool] = None
 
     _prefill_cache: Dict[int, object] = field(default_factory=dict, repr=False)
+    _append_cache: Dict[int, object] = field(default_factory=dict, repr=False)
     _decode_fn: Optional[object] = field(default=None, repr=False)
 
     @classmethod
     def create(
-        cls, cfg: ModelConfig, seed: int = 0, max_len: int = 1024, bucket: int = 64
+        cls,
+        cfg: ModelConfig,
+        seed: int = 0,
+        max_len: int = 1024,
+        bucket: int = 64,
+        session_cache_capacity: int = 4,
     ) -> "InferenceEngine":
         params = init_params(jax.random.key(seed), cfg)
-        return cls(cfg=cfg, params=params, max_len=max_len, bucket=bucket)
+        pool = (
+            SessionCachePool(capacity=session_cache_capacity)
+            if session_cache_capacity > 0 and supports_append(cfg)
+            else None
+        )
+        return cls(
+            cfg=cfg, params=params, max_len=max_len, bucket=bucket,
+            session_pool=pool,
+        )
 
     # -- jit plumbing -------------------------------------------------------
     def _prefill_fn(self, s: int):
@@ -61,6 +120,20 @@ class InferenceEngine:
             self._prefill_cache[s] = fn
         return self._prefill_cache[s]
 
+    def _append_fn(self, s: int):
+        """Incremental prefill for a chunk of s slots (compiled per chunk
+        bucket). Caches are NOT donated: the first chunk reads pool-owned
+        arrays that must stay valid for other sessions / retries."""
+        if s not in self._append_cache:
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, caches, tokens, p0, true_len):
+                return prefill_append(params, cfg, caches, tokens, p0, true_len=true_len)
+
+            self._append_cache[s] = fn
+        return self._append_cache[s]
+
     def _decode(self):
         if self._decode_fn is None:
             cfg = self.cfg
@@ -72,34 +145,138 @@ class InferenceEngine:
             self._decode_fn = fn
         return self._decode_fn
 
+    # -- prefill paths ------------------------------------------------------
+    def _full_prefill(self, input_ids: List[int]):
+        n = len(input_ids)
+        s = min(_bucket(n, self.bucket), self.max_len)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :n] = np.asarray(input_ids, np.int32) % self.cfg.vocab_size
+        true_len = jnp.array([n], jnp.int32)
+        return self._prefill_fn(s)(self.params, jnp.asarray(toks), true_len)
+
+    def _append_prefill(self, caches, suffix_ids: List[int], p0: int):
+        """Chunked incremental prefill of `suffix_ids` starting at p0."""
+        logits, pos = None, jnp.array([p0], jnp.int32)
+        i, m = 0, len(suffix_ids)
+        while i < m:
+            rem = m - i
+            s = min(self.append_chunk, _bucket(rem, self.bucket))
+            chunk = min(rem, s)
+            toks = np.zeros((1, s), np.int32)
+            toks[0, :chunk] = np.asarray(suffix_ids[i : i + chunk], np.int32) % self.cfg.vocab_size
+            true_len = jnp.array([chunk], jnp.int32)
+            logits, caches, pos = self._append_fn(s)(
+                self.params, caches, jnp.asarray(toks), pos, true_len
+            )
+            i += chunk
+        return logits, caches, pos
+
+    def _trim_for_pool(self, caches, n_valid: int):
+        """Mask kv_pos beyond the kept prefix (decode may have run past a
+        stop token between host syncs)."""
+        n = jnp.array([n_valid], jnp.int32)
+        return [
+            {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n)}
+            for c in caches
+        ]
+
     # -- public API ------------------------------------------------------------
+    def generate_ex(
+        self,
+        input_ids: List[int],
+        max_new_tokens: int = 128,
+        temperature: float = 0.0,
+        cache_key: Optional[str] = None,
+    ) -> GenerateResult:
+        """Single-sequence generation (the Context Manager path), with
+        optional session-level KV-cache reuse when ``cache_key`` is given."""
+        input_ids = list(input_ids)
+        n = len(input_ids)
+        assert n + max_new_tokens <= self.max_len, (n, max_new_tokens, self.max_len)
+
+        pool = self.session_pool if cache_key is not None else None
+        t0 = time.perf_counter()
+
+        entry, usable = (None, 0)
+        if pool is not None:
+            entry, usable = pool.match(cache_key, input_ids)
+        if entry is not None and usable > 0:
+            base = entry.caches
+            if usable < entry.pos:
+                # retry/resend: incoming ids stop inside the cached prefix —
+                # slots past `usable` hold tokens not in this request
+                base = self._trim_for_pool(base, usable)
+            logits, caches, pos = self._append_prefill(
+                base, input_ids[usable:], usable
+            )
+            hit, reused = True, usable
+        else:
+            logits, caches, pos = self._full_prefill(input_ids)
+            hit, reused = False, 0
+        prefilled = n - reused
+
+        # Decode with batched host sync: tokens stay on device; every
+        # `sync_every` steps one transfer pulls the window and scans it for
+        # stop tokens. Steps decoded past a stop are discarded.
+        out: List[int] = []
+        tok = sample(logits, temperature=temperature)
+        decode = self._decode()
+        remaining = max_new_tokens
+        stopped = False
+        while remaining > 0 and not stopped:
+            w = min(self.sync_every, remaining)
+            window = []
+            for _ in range(w):
+                window.append(tok)
+                logits, caches = decode(self.params, caches, tok[:, None], pos)
+                pos = pos + 1
+                tok = sample(logits[:, 0], temperature=temperature)
+            remaining -= w
+            host = np.asarray(jnp.stack(window)[:, 0])   # single device sync
+            for t in host:
+                out.append(int(t))
+                if int(t) in self.stop_tokens:
+                    stopped = True
+                    break
+        inference_ms = (time.perf_counter() - t0) * 1e3
+
+        # Session-pool update — off the hot path, mirroring the paper's
+        # asynchronous context update (§4.2.1). Every emitted token was
+        # decoded (its KV is in the cache), so the stored prefix is
+        # input_ids + out; kv_pos past that is trimmed.
+        cache_update_ms = 0.0
+        if pool is not None:
+            t1 = time.perf_counter()
+            prefix = input_ids + out
+            pool.put(
+                cache_key,
+                CacheEntry(
+                    token_ids=prefix,
+                    caches=self._trim_for_pool(caches, len(prefix)),
+                ),
+            )
+            cache_update_ms = (time.perf_counter() - t1) * 1e3
+
+        return GenerateResult(
+            token_ids=out,
+            cache_hit=hit,
+            reused_tokens=reused,
+            prefill_tokens=prefilled,
+            inference_ms=inference_ms,
+            cache_update_ms=cache_update_ms,
+        )
+
     def generate(
         self,
         input_ids: List[int],
         max_new_tokens: int = 128,
         temperature: float = 0.0,
+        cache_key: Optional[str] = None,
     ) -> List[int]:
-        """Single-sequence generation (the Context Manager path)."""
-        n = len(input_ids)
-        assert n + max_new_tokens <= self.max_len, (n, max_new_tokens, self.max_len)
-        s = min(_bucket(n, self.bucket), self.max_len)
-        toks = np.zeros((1, s), np.int32)
-        toks[0, :n] = np.asarray(input_ids, np.int32) % self.cfg.vocab_size
-        true_len = jnp.array([n], jnp.int32)
-
-        logits, caches, pos = self._prefill_fn(s)(self.params, jnp.asarray(toks), true_len)
-        out: List[int] = []
-        tok = sample(logits, temperature=temperature)
-        decode = self._decode()
-        for _ in range(max_new_tokens):
-            t = int(tok[0])
-            out.append(t)
-            if t in self.stop_tokens:
-                break
-            logits, caches = decode(self.params, caches, tok[:, None], pos)
-            pos = pos + 1
-            tok = sample(logits[:, 0], temperature=temperature)
-        return out
+        return self.generate_ex(
+            input_ids, max_new_tokens=max_new_tokens,
+            temperature=temperature, cache_key=cache_key,
+        ).token_ids
 
     def warmup(self, lengths: Tuple[int, ...] = (64,)) -> None:
         for s in lengths:
@@ -110,11 +287,16 @@ class InferenceEngine:
 @dataclass
 class JaxLLMService:
     """LLM Service (paper §3.2) backed by the JAX engine. Accepts the
-    pre-tokenized context parameter — the llama.cpp /completion extension."""
+    pre-tokenized context parameter — the llama.cpp /completion extension —
+    plus an optional ``cache_key`` (the session's context key) enabling
+    session-level KV-cache reuse: hit turns prefill only the new-token
+    suffix. Context that would overflow the engine's cache is truncated
+    from the *oldest* tokens (the prompt is always kept)."""
 
     model: str
     engine: InferenceEngine
     tokenizer: ByteLevelBPE
+    kv_reuse: bool = True
 
     @classmethod
     def create(
@@ -125,18 +307,53 @@ class JaxLLMService:
         seed: int = 0,
         tokenizer_seed: int = 0,
         max_len: int = 2048,
+        kv_reuse: bool = True,
+        session_cache_capacity: int = 4,
     ) -> "JaxLLMService":
-        engine = InferenceEngine.create(cfg, seed=seed, max_len=max_len)
+        engine = InferenceEngine.create(
+            cfg, seed=seed, max_len=max_len,
+            session_cache_capacity=session_cache_capacity if kv_reuse else 0,
+        )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
-        return cls(model=model, engine=engine, tokenizer=tok)
+        return cls(model=model, engine=engine, tokenizer=tok, kv_reuse=kv_reuse)
 
     def completion(
-        self, context_ids: List[int], prompt_ids: List[int], max_new_tokens: int
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
     ) -> ServiceResult:
-        t0 = time.perf_counter()
-        ids = list(context_ids) + list(prompt_ids)
-        budget = self.engine.max_len - len(ids) - 1
-        gen = self.engine.generate(ids, max_new_tokens=min(max_new_tokens, max(1, budget)))
-        inference_ms = (time.perf_counter() - t0) * 1e3
+        context_ids = list(context_ids)
+        prompt_ids = list(prompt_ids)
+        max_len = self.engine.max_len
+        # Context-overflow guard: keep the prompt, drop the oldest context
+        # tokens, and reserve a modest generation budget.
+        reserve = max(1, min(max_new_tokens, 16))
+        max_input = max(1, max_len - 1 - reserve)
+        total = len(context_ids) + len(prompt_ids)
+        if total > max_input:
+            drop = total - max_input
+            if drop < len(context_ids):
+                context_ids = context_ids[drop:]
+            else:
+                context_ids = []
+                prompt_ids = prompt_ids[-max_input:]
+        ids = context_ids + prompt_ids
+        budget = max_len - len(ids) - 1
+        res = self.engine.generate_ex(
+            ids,
+            max_new_tokens=min(max_new_tokens, max(1, budget)),
+            cache_key=cache_key if self.kv_reuse else None,
+        )
+        gen = res.token_ids
         text = self.tokenizer.decode([t for t in gen if t not in self.engine.stop_tokens])
-        return ServiceResult(text=text, token_ids=gen, inference_ms=inference_ms)
+        return ServiceResult(
+            text=text,
+            token_ids=gen,
+            inference_ms=res.inference_ms,
+            cache_hit=res.cache_hit,
+            reused_tokens=res.reused_tokens,
+            prefill_tokens=res.prefill_tokens,
+            cache_update_ms=res.cache_update_ms,
+        )

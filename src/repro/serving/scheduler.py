@@ -99,11 +99,6 @@ class BatchedServer:
             self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
         )
 
-        def put(big, small):
-            if big.ndim == small.ndim:      # stacked over layers: (L,B,...)
-                return big.at[:, idx].set(small[:, 0])
-            raise AssertionError
-
         new_caches = []
         for big, small in zip(self.caches, one_caches):
             merged = {}

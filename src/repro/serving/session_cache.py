@@ -1,0 +1,118 @@
+"""Session-scoped KV-cache pool (beyond-paper: §4.1 one level down).
+
+DisCEdge stores session context *pre-tokenized* so the request path never
+re-tokenizes history; this pool extends the same idea to the KV state: the
+decode caches produced while serving a turn are kept, keyed by the session's
+context key, so the next turn only prefills its *new* tokens
+(:func:`repro.models.prefill_append`) instead of re-running the full prefill
+over the stored history — per-turn prefill cost drops from O(history) to
+O(new tokens).
+
+The pool is a capacity-bounded LRU. Correctness never depends on a hit: an
+entry is only reused when its stored token prefix exactly matches the head
+of the incoming ``context_ids + prompt_ids`` (longest-common-prefix check);
+any mismatch — stale replica, edited history, truncated context — drops the
+entry and falls back to a from-scratch prefill.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+@dataclass
+class CacheEntry:
+    """KV state for the token prefix ``token_ids``; ``caches`` is the
+    models-layer cache pytree with kv_pos trimmed to ``pos``."""
+
+    token_ids: List[int]
+    caches: List[Dict]
+
+    @property
+    def pos(self) -> int:
+        """Slots [0, pos) of `caches` hold exactly `token_ids`."""
+        return len(self.token_ids)
+
+
+@dataclass
+class SessionCachePool:
+    """LRU pool of per-session decode caches, keyed by context key."""
+
+    capacity: int = 4
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    _entries: "OrderedDict[str, CacheEntry]" = field(
+        default_factory=OrderedDict, repr=False
+    )
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def match(self, key: str, token_ids: Sequence[int]) -> Tuple[Optional[CacheEntry], int]:
+        """Look up ``key`` and prefix-match ``token_ids`` against the cached
+        prefix. Returns ``(entry, usable)`` where ``usable`` is the number of
+        leading tokens whose KV can be reused (0 => full prefill).
+
+        At least one token is always left to (re)compute so the caller gets
+        last-position logits. A *divergent* prefix (stale/edited history)
+        invalidates the entry; incoming ids that are a strict prefix of the
+        cached tokens (client retry/resend) still reuse — the caller must
+        trim kv_pos to ``usable`` whenever ``usable < entry.pos``."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None, 0
+        n = len(token_ids)
+        lcp = longest_common_prefix(entry.token_ids, token_ids)
+        if lcp < entry.pos and lcp < n:
+            # genuine divergence: the cache beyond lcp is for wrong tokens
+            self.invalidations += 1
+            self.misses += 1
+            del self._entries[key]
+            return None, 0
+        usable = min(entry.pos, n - 1)
+        if usable <= 0:
+            self.misses += 1
+            return None, 0
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry, usable
+
+    def put(self, key: str, entry: CacheEntry) -> None:
+        if self.capacity <= 0:
+            return
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, key: str) -> None:
+        self._entries.pop(key, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+        }

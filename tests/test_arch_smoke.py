@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~80s: one compile per assigned architecture
+
 from repro.configs import ASSIGNED, get_config
 from repro.data import BatchIterator
 from repro.models import (

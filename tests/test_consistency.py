@@ -9,6 +9,8 @@ think times) and assert the system's invariants:
 """
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

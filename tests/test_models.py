@@ -46,6 +46,7 @@ def make_cfg(name):
     return ModelConfig(name=name, **kw)
 
 
+@pytest.mark.slow  # ~60s across families: full forward + T decode steps each
 @pytest.mark.parametrize("family", sorted(FAMILIES))
 def test_decode_matches_forward(family):
     cfg = make_cfg(family)

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~35s: shard_map/GSPMD compiles + subprocess runs
+
 from repro.training.trainer import cross_entropy
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -1,0 +1,240 @@
+"""Session-level KV-cache reuse: incremental prefill equivalence, the LRU
+session pool, prefix-mismatch fallback, and the context-overflow guard."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    init_params,
+    prefill,
+    prefill_append,
+    supports_append,
+)
+from repro.serving import JaxLLMService, SessionCachePool
+from repro.serving.session_cache import CacheEntry, longest_common_prefix
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig(
+        name="tiny-kv", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=4096, param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.key(0), cfg)
+
+
+def _greedy(params, cfg, logits, caches, pos, n=10):
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(n):
+        out.append(int(tok[0]))
+        logits, caches = decode_step(params, cfg, caches, tok[:, None], pos)
+        pos = pos + 1
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model layer: prefill_append ≡ from-scratch prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow  # ~16s of one-off prefill/append shape compiles
+def test_append_matches_full_prefill(cfg, params):
+    """From-scratch prefill of ctx+suffix and cached-prefix + chunked append
+    must agree: same kv_pos, same greedy continuation."""
+    rng = np.random.default_rng(7)
+    ctx = rng.integers(0, cfg.vocab_size, size=40).tolist()
+    suf = rng.integers(0, cfg.vocab_size, size=17).tolist()
+    max_len = 128
+
+    full = jnp.asarray(np.array(ctx + suf, np.int32)[None])
+    lf, cf, pf = prefill(params, cfg, full, max_len=max_len)
+
+    # cached path: prefill the prefix, then append the suffix in two chunks
+    # (one exact-size, one right-padded with true_len masking)
+    la, ca, pa = prefill(params, cfg, jnp.asarray(np.array(ctx, np.int32)[None]),
+                         max_len=max_len)
+    c1 = jnp.asarray(np.array(suf[:10], np.int32)[None])
+    la, ca, pa = prefill_append(params, cfg, ca, c1, p0=pa)
+    padded = np.zeros((1, 8), np.int32)
+    padded[0, :7] = suf[10:]
+    la, ca, pa = prefill_append(params, cfg, ca, jnp.asarray(padded), p0=pa,
+                                true_len=jnp.array([7], jnp.int32))
+
+    assert int(pf[0]) == int(pa[0]) == len(ctx) + len(suf)
+    assert jnp.array_equal(cf[0]["kv_pos"], ca[0]["kv_pos"])
+    # K/V must match on every valid slot (invalid slots may hold masked junk)
+    valid = (cf[0]["kv_pos"] >= 0)[None, :, :, None, None]
+    assert float(jnp.max(jnp.abs(jnp.where(valid, cf[0]["k"] - ca[0]["k"], 0)))) < 1e-4
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(la), atol=1e-4)
+    assert _greedy(params, cfg, lf, cf, pf) == _greedy(params, cfg, la, ca, pa)
+
+
+def test_append_rejects_unsupported_arch():
+    ssm_cfg = ModelConfig(
+        name="tiny-ssm", arch_type="ssm", n_layers=2, d_model=64, n_heads=0,
+        n_kv_heads=0, d_ff=0, vocab_size=512, ssm_state=16, ssm_head_dim=32,
+        ssm_chunk=4, param_dtype="float32", compute_dtype="float32",
+    )
+    assert not supports_append(ssm_cfg)
+    params = init_params(jax.random.key(0), ssm_cfg)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    _, caches, pos = prefill(params, ssm_cfg, toks, max_len=32)
+    with pytest.raises(AssertionError):
+        prefill_append(params, ssm_cfg, caches, toks, p0=pos)
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: end-to-end reuse equivalence + overflow guard
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def services(cfg):
+    reuse = JaxLLMService.create("tiny-kv", cfg, max_len=512)
+    scratch = JaxLLMService.create("tiny-kv", cfg, max_len=512, kv_reuse=False)
+    return reuse, scratch
+
+
+def test_cached_prefill_identical_generations(services):
+    """Cache-hit turns must generate exactly what a from-scratch prefill
+    generates, while prefilling only the new-token suffix."""
+    reuse, scratch = services
+    tok = reuse.tokenizer
+    ctx_a, ctx_b = [], []
+    for turn in range(3):
+        p = tok.encode(f"turn {turn}: describe the robot sensor stack")
+        ra = reuse.completion(ctx_a, p, 8, cache_key="sess-eq")
+        rb = scratch.completion(ctx_b, p, 8)
+        assert ra.token_ids == rb.token_ids
+        if turn == 0:
+            assert not ra.cache_hit
+        else:
+            assert ra.cache_hit
+            assert ra.reused_tokens == len(ctx_a)
+            assert ra.prefill_tokens == len(p)
+        ctx_a = ctx_a + p + ra.token_ids
+        ctx_b = ctx_b + p + rb.token_ids
+
+
+def test_prefix_mismatch_falls_back_to_full_prefill(services):
+    """Edited/stale history must invalidate the cached prefix and produce
+    the same output as a from-scratch service."""
+    reuse, scratch = services
+    tok = reuse.tokenizer
+    p0 = tok.encode("first question about lidar")
+    r0 = reuse.completion([], p0, 8, cache_key="sess-mm")
+    ctx = p0 + r0.token_ids
+    edited = list(ctx)
+    edited[2] = (edited[2] + 1) % reuse.engine.cfg.vocab_size  # history edit
+    p1 = tok.encode("second question about odometry")
+    inv_before = reuse.engine.session_pool.invalidations
+    r1 = reuse.completion(edited, p1, 8, cache_key="sess-mm")
+    assert not r1.cache_hit
+    assert r1.prefill_tokens == len(edited) + len(p1)
+    assert reuse.engine.session_pool.invalidations == inv_before + 1
+    rs = scratch.completion(edited, p1, 8)
+    assert r1.token_ids == rs.token_ids
+
+
+def test_windowed_decode_matches_per_token_sync(services):
+    """Device-side stop scanning (sync every k) must not change outputs."""
+    reuse, _ = services
+    ids = reuse.tokenizer.encode("compare the two mapping approaches")
+    orig = reuse.engine.sync_every
+    try:
+        reuse.engine.sync_every = 1
+        a = reuse.engine.generate(ids, max_new_tokens=12)
+        reuse.engine.sync_every = 5
+        b = reuse.engine.generate(ids, max_new_tokens=12)
+    finally:
+        reuse.engine.sync_every = orig
+    assert a == b
+
+
+def test_context_overflow_truncates_oldest(services):
+    """Near-max_len context must not trip the generate assert: the oldest
+    context tokens are dropped, the prompt is kept."""
+    reuse, _ = services
+    tok = reuse.tokenizer
+    big_ctx = tok.encode("history filler words " * 400)
+    assert len(big_ctx) > reuse.engine.max_len
+    prompt = tok.encode("what did we just discuss?")
+    r = reuse.completion(big_ctx, prompt, 16, cache_key="sess-ovf")
+    assert len(r.token_ids) >= 1
+    assert r.prefill_tokens + r.reused_tokens < reuse.engine.max_len
+
+
+# ---------------------------------------------------------------------------
+# Pool mechanics (pure python — no device work)
+# ---------------------------------------------------------------------------
+
+def _entry(ids):
+    return CacheEntry(token_ids=list(ids), caches=[])
+
+
+def test_lcp():
+    assert longest_common_prefix([1, 2, 3], [1, 2, 4]) == 2
+    assert longest_common_prefix([], [1]) == 0
+    assert longest_common_prefix([1, 2], [1, 2]) == 2
+
+
+def test_pool_lru_eviction():
+    pool = SessionCachePool(capacity=2)
+    pool.put("a", _entry([1, 2]))
+    pool.put("b", _entry([3, 4]))
+    pool.put("c", _entry([5, 6]))          # evicts "a" (LRU)
+    assert pool.evictions == 1
+    assert "a" not in pool and "b" in pool and "c" in pool
+    pool.match("b", [3, 4, 9])             # touch "b" -> "c" is now LRU
+    pool.put("d", _entry([7, 8]))          # evicts "c" (b was refreshed)
+    assert "b" in pool and "c" not in pool
+
+
+def test_pool_mismatch_invalidates():
+    pool = SessionCachePool(capacity=2)
+    pool.put("s", _entry([1, 2, 3]))
+    entry, usable = pool.match("s", [1, 9, 3, 4])   # diverges at index 1
+    assert entry is None and usable == 0
+    assert pool.invalidations == 1 and "s" not in pool
+
+
+def test_pool_match_leaves_one_token_to_compute():
+    pool = SessionCachePool(capacity=2)
+    pool.put("s", _entry([1, 2, 3]))
+    entry, usable = pool.match("s", [1, 2, 3])      # identical resend
+    assert entry is not None and usable == 2        # last token recomputed
+    entry, usable = pool.match("s", [1, 2, 3, 4, 5])
+    assert entry is not None and usable == 3
+
+
+def test_pool_shorter_incoming_reuses_with_trim():
+    """A client retry resends a prefix of the cached tokens — that is not a
+    divergence: the matching head is reusable (caller trims kv_pos)."""
+    pool = SessionCachePool(capacity=2)
+    pool.put("s", _entry([1, 2, 3, 4]))
+    entry, usable = pool.match("s", [1, 2])
+    assert entry is not None and usable == 1        # reuse [1], recompute [2]
+    assert pool.invalidations == 0 and "s" in pool
+
+
+def test_engine_resend_identical_request(services):
+    """Resending the exact same request (client retry) must reuse the cached
+    prefix and reproduce the same generation."""
+    reuse, scratch = services
+    tok = reuse.tokenizer
+    ctx = tok.encode("a conversation about wheel odometry calibration")
+    p = tok.encode("and what about slip compensation?")
+    r1 = reuse.completion(ctx, p, 8, cache_key="sess-rs")
+    r2 = reuse.completion(ctx, p, 8, cache_key="sess-rs")
+    rs = scratch.completion(ctx, p, 8)
+    assert r2.cache_hit and r2.reused_tokens == len(ctx) + len(p) - 1
+    assert r1.token_ids == r2.token_ids == rs.token_ids

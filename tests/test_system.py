@@ -3,6 +3,8 @@ engine — 9-turn conversation, node switches at turns 3/5/7, all metrics."""
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute: full 9-turn scenarios on the real engine
+
 from repro.core import ContextMode
 from repro.edge import EdgeCluster, LLMClient
 from repro.models import ModelConfig

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute: jitted train steps + checkpoint roundtrips
+
 from repro.data import BatchIterator
 from repro.models import ModelConfig, init_params
 from repro.training import (
