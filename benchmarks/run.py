@@ -13,6 +13,7 @@ import sys
 
 def main() -> None:
     from .kernel_bench import kernel_microbench
+    from .migration_bench import migration_bench
     from .paper_figures import ALL_FIGURES
     from .roofline_table import roofline_table
     from .session_bench import session_kv_bench
@@ -25,7 +26,9 @@ def main() -> None:
         print(f"{name},{us_per_call:.3f},{derived}")
 
     print("name,us_per_call,derived")
-    benches = ALL_FIGURES + [kernel_microbench, roofline_table, session_kv_bench]
+    benches = ALL_FIGURES + [
+        kernel_microbench, roofline_table, session_kv_bench, migration_bench,
+    ]
     for bench in benches:
         tag = bench.__name__
         if wanted and not any(tag.startswith(w) or w in tag for w in wanted):

@@ -1,14 +1,22 @@
 #!/usr/bin/env bash
 # CI gate: fast inner loop first (everything not marked `slow` — sub-minute),
-# then the repo's tier-1 verify (the full suite). Usage:
-#   scripts/ci.sh            # fast gate + full tier-1
-#   scripts/ci.sh --fast     # fast gate only (the builder's inner loop)
+# then a docs/quickstart smoke, then the repo's tier-1 verify (the full
+# suite). Usage:
+#   scripts/ci.sh            # fast gate + smoke + full tier-1
+#   scripts/ci.sh --fast     # fast gate + smoke only (the builder's inner loop)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== fast gate: pytest -q -m 'not slow' =="
 python -m pytest -q -m "not slow"
+
+echo "== smoke: examples/quickstart.py (full stack, asserts warm-start roam) =="
+python examples/quickstart.py > /dev/null
+
+echo "== docs freshness: tier-1 command present in README.md + docs/ =="
+grep -q -- "python -m pytest -x -q" README.md
+grep -q -- "python -m pytest -x -q" docs/architecture.md
 
 if [[ "${1:-}" == "--fast" ]]; then
     exit 0

@@ -75,6 +75,10 @@ class ServiceResult:
     reused_tokens: int = 0
     prefill_tokens: int = 0
     cache_update_ms: float = 0.0
+    # True when the reused KV prefix was installed by the migration
+    # warm-start hook (replication arrival primed the pool) rather than by a
+    # turn served on this node — see docs/architecture.md.
+    warm_start: bool = False
 
 
 @dataclass
@@ -144,6 +148,13 @@ class ContextManager:
             timing.context_read_ms = rr.wait_ms
             timing.retries = rr.retries
             stale = rr.stale
+            # Migration detection: the stored context was last written by a
+            # peer node — the client roamed here since its previous turn.
+            timing.migrated = bool(
+                rr.value is not None
+                and rr.value.origin
+                and rr.value.origin != self.node_id
+            )
 
             if req.mode is ContextMode.TOKENIZED:
                 stored_tok = (
@@ -186,6 +197,7 @@ class ContextManager:
         timing.kv_cache_hit = result.cache_hit
         timing.kv_reused_tokens = result.reused_tokens
         timing.prefill_tokens = result.prefill_tokens
+        timing.kv_warm_start = result.warm_start
         net.advance(result.inference_ms)
 
         n_ctx = len(context_ids) if req.mode is ContextMode.TOKENIZED else 0

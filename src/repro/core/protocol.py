@@ -70,6 +70,13 @@ class Timing:
     kv_cache_hit: bool = False
     kv_reused_tokens: int = 0
     prefill_tokens: int = 0
+    # Node migration (docs/architecture.md): `migrated` — this turn resumed a
+    # session whose stored context was last written by a *different* node (the
+    # client roamed here); `kv_warm_start` — the KV prefix reused this turn
+    # was installed by the replication-arrival warm-start hook (an eager
+    # prime), not by a turn previously served on this node.
+    migrated: bool = False
+    kv_warm_start: bool = False
 
     @property
     def response_time_ms(self) -> float:

@@ -1,4 +1,15 @@
-"""Edge cluster wiring: nodes + network + distributed store + keygroups."""
+"""Edge cluster wiring: nodes + network + distributed store + keygroups.
+
+Builds the deployment the paper evaluates (§4.1): a set of
+:class:`~repro.edge.node.EdgeNode`s over a simulated network, one FReD-style
+keygroup per model in a shared :class:`~repro.store.distributed.
+DistributedKVStore` (paper §3.3 — context replicates only among the nodes
+serving that model). Beyond the paper, ``build(warm_start="eager")`` (the
+default) also registers each node's migration warm-start hook: replicated
+tokenized contexts pre-warm the destination node's session KV pool so a
+roaming client resumes with a suffix-only prefill instead of a cold one —
+see docs/architecture.md, "Migration warm-start".
+"""
 
 from __future__ import annotations
 
@@ -33,9 +44,12 @@ class EdgeCluster:
         replication: str = "full",
         retry: Optional[RetryPolicy] = None,
         context_ttl_ms: Optional[float] = None,
+        warm_start: str = "eager",
     ) -> "EdgeCluster":
         """Build a cluster where every node serves the same model — one
-        keygroup per model, membership = nodes serving it (paper §3.3)."""
+        keygroup per model, membership = nodes serving it (paper §3.3).
+        ``warm_start`` ("eager"/"off") controls the migration warm-start
+        hook on each node (see EdgeNode.create)."""
         net = Network(default_link=inter_node_link or Link(latency_ms=1.0, bandwidth_mbps=1000.0))
         if client_link is not None:
             for nid in node_ids:
@@ -62,7 +76,9 @@ class EdgeCluster:
                 ttl_ms=context_ttl_ms,
             )
         for nid in node_ids:
-            cluster.nodes[nid] = EdgeNode.create(nid, store, services[nid], retry=retry)
+            cluster.nodes[nid] = EdgeNode.create(
+                nid, store, services[nid], retry=retry, warm_start=warm_start
+            )
         return cluster
 
     def node(self, node_id: str) -> EdgeNode:
@@ -70,6 +86,10 @@ class EdgeCluster:
 
     def sync_bytes(self) -> int:
         return self.store.sync_bytes()
+
+    def warm_starts(self) -> int:
+        """Total pool primes performed on replication arrival, all nodes."""
+        return sum(n.warm_starts for n in self.nodes.values())
 
     def client_bytes_up(self) -> int:
         return self.network.bytes_for_tag(CLIENT_UP_TAG)

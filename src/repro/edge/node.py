@@ -1,14 +1,28 @@
-"""Edge node: Context Manager + LLM Service + local KV replica (paper Fig. 1)."""
+"""Edge node: Context Manager + LLM Service + local KV replica (paper Fig. 1).
+
+One :class:`EdgeNode` is the unit of deployment in a DisCEdge cluster — the
+co-located triple the paper runs on each edge machine. Beyond the paper, the
+node is also where the *migration warm-start* hook lives (docs/
+architecture.md, "Migration warm-start"): the node subscribes to replicated
+context writes landing on its local KV replica
+(:meth:`repro.store.distributed.DistributedKVStore.on_apply`) and, for each
+arriving tokenized context, asks its LLM Service to ``prime`` the session
+KV-cache pool with that token sequence. When the roaming client's next turn
+lands here, the engine prefix-matches the primed entry and prefills only the
+new tokens — the node switch stops being a full re-prefill.
+"""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from time import perf_counter
 from typing import Optional
 
 from ..core.consistency import RetryPolicy
 from ..core.manager import ContextManager, LLMServiceProtocol
 from ..core.protocol import Request, Response
 from ..store.distributed import DistributedKVStore
+from ..store.kvstore import VersionedValue
 
 
 @dataclass
@@ -16,6 +30,11 @@ class EdgeNode:
     node_id: str
     manager: ContextManager
     service: LLMServiceProtocol
+    # Migration warm-start accounting: primes performed on replication
+    # arrival, and the wall time they cost (off the client-observable path —
+    # the work overlaps client think time, like the paper's async update).
+    warm_starts: int = 0
+    warm_start_ms: float = 0.0
 
     @classmethod
     def create(
@@ -24,14 +43,42 @@ class EdgeNode:
         store: DistributedKVStore,
         service: LLMServiceProtocol,
         retry: Optional[RetryPolicy] = None,
+        warm_start: str = "eager",
     ) -> "EdgeNode":
+        """``warm_start="eager"`` (default) subscribes the node to
+        replication arrivals and proactively primes the service's session
+        KV pool; ``"off"`` reverts to lazy behaviour — the first turn after
+        a node switch pays a full prefill, which registers the prefix so
+        only *subsequent* turns are suffix-only (the PR-1 baseline)."""
+        assert warm_start in ("eager", "off"), warm_start
         mgr = ContextManager(
             node_id=node_id,
             store=store,
             service=service,
             retry=retry or RetryPolicy(),
         )
-        return cls(node_id=node_id, manager=mgr, service=service)
+        node = cls(node_id=node_id, manager=mgr, service=service)
+        if warm_start == "eager" and hasattr(service, "prime"):
+            store.on_apply(node_id, node._on_replicated_context)
+        return node
 
     def handle(self, req: Request) -> Response:
         return self.manager.handle(req)
+
+    # -- migration warm-start hook ----------------------------------------
+    def _on_replicated_context(
+        self, keygroup: str, key: str, vv: VersionedValue
+    ) -> None:
+        """Replication arrival → pre-warm the session KV pool. Only
+        tokenized contexts for this node's own model prime anything; raw
+        text has no token ids to prefill (the paper's raw baseline gets no
+        warm start — one more cost of storing text)."""
+        if keygroup != self.service.model:
+            return
+        ids = getattr(vv.value, "ids", None)
+        if not ids:
+            return
+        t0 = perf_counter()
+        if self.service.prime(key, list(ids)):
+            self.warm_starts += 1
+            self.warm_start_ms += (perf_counter() - t0) * 1e3

@@ -19,7 +19,7 @@ history and only processes the new prompt tokens.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
@@ -27,15 +27,35 @@ from ..core.manager import ServiceResult
 from ..tokenizer import ByteLevelBPE, IM_END, get_tokenizer
 
 
+def _lcp(a: List[int], b: List[int]) -> int:
+    """Longest common prefix — mirrors repro.serving.session_cache
+    (not imported: the echo service stays free of the JAX stack)."""
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
 @dataclass
 class EchoLLMService:
     """Deterministic fake inference engine with an analytic cost model.
 
     Cost model (per request):
-        prefill_ms = prefill_ms_per_token * (len(context) + len(prompt))
+        prefill_ms = prefill_ms_per_token * n_prefilled
         decode_ms  = decode_ms_per_token  * n_generated
     The generated text is a deterministic function of the input tokens, so
     consistency tests can assert that responses depend on the full context.
+
+    ``cache_key`` is honored the same way the JAX service honors it: the
+    service remembers, per key, the token prefix whose (virtual) KV state it
+    holds, prefix-matches each request against it, and reports
+    cache_hit/reused_tokens/prefill_tokens with identical semantics —
+    including ``prime`` support for the migration warm-start hook
+    (docs/architecture.md). With ``kv_reuse=False`` (the default, matching
+    the seed behaviour) the analytic cost still charges the full input as
+    prefill and no reuse is reported, mirroring a JaxLLMService built with
+    ``kv_reuse=False``.
     """
 
     model: str
@@ -47,20 +67,51 @@ class EchoLLMService:
     # <1 ms on M2 — see ContextManager.tokenize_scale)
     tokenize_scale: float = 1.0
     n_generate: int = 24
+    kv_reuse: bool = False
 
     def __post_init__(self) -> None:
         self.tokenizer: ByteLevelBPE = get_tokenizer(
             self.vocab_size, seed=self.tokenizer_seed, name=self.model
         )
+        # cache_key -> token prefix whose KV the analytic engine "holds",
+        # and how that prefix got here ("serve" | "prime")
+        self._kv_prefix: Dict[str, List[int]] = {}
+        self._kv_source: Dict[str, str] = {}
+
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool:
+        """Migration warm-start (analytic twin of InferenceEngine.prime)."""
+        if not self.kv_reuse or not token_ids:
+            return False
+        self._kv_prefix[cache_key] = list(token_ids)
+        self._kv_source[cache_key] = "prime"
+        return True
 
     def completion(
         self,
         context_ids: List[int],
         prompt_ids: List[int],
         max_new_tokens: int,
-        cache_key: object = None,  # KV reuse: analytic model has no KV state
+        cache_key: object = None,
     ) -> ServiceResult:
         all_ids = list(context_ids) + list(prompt_ids)
+        n = len(all_ids)
+        # Session-KV accounting, same semantics as the JAX engine's pool:
+        # reuse the matching head of the remembered prefix (at least one
+        # token recomputed), invalidate on divergence, full prefill on miss.
+        hit, warm, reused = False, False, 0
+        if self.kv_reuse and cache_key is not None:
+            prev = self._kv_prefix.get(cache_key)
+            if prev is not None:
+                lcp = _lcp(prev, all_ids)
+                if lcp < len(prev) and lcp < n:
+                    del self._kv_prefix[cache_key]   # diverged: stale/edited
+                    self._kv_source.pop(cache_key, None)
+                else:
+                    usable = min(len(prev), n - 1)
+                    if usable > 0:
+                        hit, reused = True, usable
+                        warm = self._kv_source.get(cache_key) == "prime"
+        n_prefill = n - reused
         n_gen = min(self.n_generate, max_new_tokens)
         # deterministic "generation": seeded by content so answers differ
         # when context differs (lets tests detect context loss)
@@ -82,8 +133,21 @@ class EchoLLMService:
         # text must decode-match the ids (a real model's output re-encodes
         # canonically) so raw/client-side modes see the same token counts
         text = self.tokenizer.decode([t for t in token_ids if t >= 8]).strip()
+        # With kv_reuse the analytic prefill charges only the non-reused
+        # suffix — the same O(new tokens) the real engine pays on a hit.
         inference_ms = (
-            self.prefill_ms_per_token * len(all_ids)
+            self.prefill_ms_per_token * (n_prefill if self.kv_reuse else n)
             + self.decode_ms_per_token * len(token_ids)
         )
-        return ServiceResult(text=text, token_ids=token_ids, inference_ms=inference_ms)
+        if self.kv_reuse and cache_key is not None:
+            self._kv_prefix[cache_key] = all_ids + token_ids
+            self._kv_source[cache_key] = "serve"
+        return ServiceResult(
+            text=text,
+            token_ids=token_ids,
+            inference_ms=inference_ms,
+            cache_hit=hit,
+            reused_tokens=reused,
+            prefill_tokens=n_prefill,
+            warm_start=warm,
+        )

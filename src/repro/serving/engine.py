@@ -54,11 +54,37 @@ from ..models import (
 from ..models.cache import trim_kv_pos
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
 from .sampling import sample
-from .session_cache import CacheEntry, SessionCachePool
+from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
 
 
 def _bucket(n: int, step: int) -> int:
     return max(step, ((n + step - 1) // step) * step)
+
+
+def chunked_append(
+    append_fn, params, caches, suffix_ids: List[int], p0: int,
+    vocab_size: int, chunk: int, bucket: int,
+):
+    """Chunked incremental prefill of ``suffix_ids`` into existing B=1
+    ``caches`` starting at absolute offset ``p0`` — the one loop shared by
+    the single-stream engine, the warm-start prime path, and the batched
+    scheduler's slot admission. Chunks are right-padded to ``bucket``
+    multiples and capped at ``chunk`` slots so jit compiles stay bounded.
+    ``append_fn(params, caches, tokens, pos, true_len)`` must wrap
+    :func:`repro.models.prefill_append`."""
+    logits, pos = None, jnp.array([p0], jnp.int32)
+    i, m = 0, len(suffix_ids)
+    while i < m:
+        rem = m - i
+        s = min(chunk, _bucket(rem, bucket))
+        c = min(rem, s)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :c] = np.asarray(suffix_ids[i : i + c], np.int32) % vocab_size
+        logits, caches, pos = append_fn(
+            params, caches, jnp.asarray(toks), pos, jnp.array([c], jnp.int32)
+        )
+        i += c
+    return logits, caches, pos
 
 
 @dataclass
@@ -71,6 +97,7 @@ class GenerateResult:
     prefill_tokens: int = 0      # tokens actually prefilled this turn
     inference_ms: float = 0.0    # hot path: prefill + decode (pool update excluded)
     cache_update_ms: float = 0.0  # session-pool update, off the hot path
+    warm_start: bool = False     # hit entry was installed by prime() (migration)
 
 
 @dataclass
@@ -87,6 +114,10 @@ class InferenceEngine:
     _prefill_cache: Dict[int, object] = field(default_factory=dict, repr=False)
     _append_cache: Dict[int, object] = field(default_factory=dict, repr=False)
     _decode_fn: Optional[object] = field(default=None, repr=False)
+
+    # Migration warm-start accounting (prime() runs off the serving hot path)
+    prime_count: int = 0
+    prime_ms: float = 0.0
 
     @classmethod
     def create(
@@ -156,20 +187,13 @@ class InferenceEngine:
 
     def _append_prefill(self, caches, suffix_ids: List[int], p0: int):
         """Chunked incremental prefill of `suffix_ids` starting at p0."""
-        logits, pos = None, jnp.array([p0], jnp.int32)
-        i, m = 0, len(suffix_ids)
-        while i < m:
-            rem = m - i
-            s = min(self.append_chunk, _bucket(rem, self.bucket))
-            chunk = min(rem, s)
-            toks = np.zeros((1, s), np.int32)
-            toks[0, :chunk] = np.asarray(suffix_ids[i : i + chunk], np.int32) % self.cfg.vocab_size
-            true_len = jnp.array([chunk], jnp.int32)
-            logits, caches, pos = self._append_fn(s)(
-                self.params, caches, jnp.asarray(toks), pos, true_len
-            )
-            i += chunk
-        return logits, caches, pos
+        return chunked_append(
+            lambda params, c, toks, pos, tl: self._append_fn(toks.shape[1])(
+                params, c, toks, pos, tl
+            ),
+            self.params, caches, suffix_ids, p0,
+            self.cfg.vocab_size, self.append_chunk, self.bucket,
+        )
 
     def _trim_for_pool(self, caches, n_valid: int):
         """Mask kv_pos beyond the kept prefix (decode may have run past a
@@ -179,6 +203,68 @@ class InferenceEngine:
             {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n)}
             for c in caches
         ]
+
+    # -- migration warm-start ----------------------------------------------
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool:
+        """Pre-warm the session pool for ``cache_key`` with the KV state of
+        ``token_ids`` — the migration warm-start path (docs/architecture.md).
+
+        Called off the serving hot path when a replicated tokenized context
+        lands on this node's KV replica: the roaming client's first turn
+        here then prefix-matches the primed entry and prefills only its new
+        tokens instead of the whole stored history. If an entry for the key
+        already covers a prefix of ``token_ids`` (an earlier prime, or a
+        turn served here before the client roamed away), only the delta is
+        chunk-prefilled; if it already covers everything, this is a no-op.
+        Returns True when the pool now holds KV for the full sequence."""
+        pool = self.session_pool
+        if pool is None or not token_ids:
+            return False
+        n = len(token_ids)
+        if n > self.max_len - 1 - 16:
+            # Matches JaxLLMService.completion's overflow guard (its max
+            # generation reserve is 16): a context this long gets truncated
+            # from the oldest end on the serving path, which can never
+            # prefix-match a primed entry — priming would be a wasted full
+            # prefill that also invalidates any useful serve entry.
+            return False
+        t0 = time.perf_counter()
+        entry = pool.peek(cache_key)
+        if entry is None and len(pool) >= pool.capacity:
+            # Full pool and this session isn't in it: the low-priority
+            # insert below would be evicted immediately (primes never
+            # displace the node's serve entries) — skip the prefill work.
+            return False
+        usable = 0
+        if entry is not None:
+            lcp = longest_common_prefix(entry.token_ids, token_ids)
+            if lcp < entry.pos and lcp < n:
+                pool.invalidate(cache_key)  # diverged: stale/edited history
+            elif entry.pos >= n:
+                return True                 # already warm (covers everything)
+            else:
+                usable = lcp                # extend: chunk-prefill the delta
+        if usable > 0:
+            _, caches, _ = self._append_prefill(
+                entry.caches, token_ids[usable:], usable
+            )
+        else:
+            _, caches, _ = self._full_prefill(token_ids)
+        caches = self._trim_for_pool(caches, n)
+        # Prime compute finishes *here*, inside the off-hot-path window
+        # (client think time): without the barrier, async-dispatched XLA
+        # work would still be running when the next serving turn starts and
+        # contend with its measured prefill/decode.
+        jax.block_until_ready(caches)
+        pool.put(
+            cache_key,
+            CacheEntry(token_ids=list(token_ids), caches=caches, source="prime"),
+            low_priority=True,
+        )
+        pool.primes += 1
+        self.prime_count += 1
+        self.prime_ms += (time.perf_counter() - t0) * 1e3
+        return True
 
     # -- public API ------------------------------------------------------------
     def generate_ex(
@@ -210,9 +296,10 @@ class InferenceEngine:
                 base, input_ids[usable:], usable
             )
             hit, reused = True, usable
+            warm = entry.source == "prime"
         else:
             logits, caches, pos = self._full_prefill(input_ids)
-            hit, reused = False, 0
+            hit, reused, warm = False, 0, False
         prefilled = n - reused
 
         # Decode with batched host sync: tokens stay on device; every
@@ -253,6 +340,7 @@ class InferenceEngine:
                 CacheEntry(
                     token_ids=prefix,
                     caches=self._trim_for_pool(caches, len(prefix)),
+                    source="serve",
                 ),
             )
             cache_update_ms = (time.perf_counter() - t1) * 1e3
@@ -264,6 +352,7 @@ class InferenceEngine:
             prefill_tokens=prefilled,
             inference_ms=inference_ms,
             cache_update_ms=cache_update_ms,
+            warm_start=warm,
         )
 
     def generate(
@@ -317,6 +406,15 @@ class JaxLLMService:
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, engine=engine, tokenizer=tok, kv_reuse=kv_reuse)
 
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool:
+        """Migration warm-start entry point (called by the EdgeNode
+        replication-arrival hook, off the serving hot path): prefill the
+        replicated tokenized context into the engine's session pool so the
+        roaming client's next turn here is suffix-only."""
+        if not self.kv_reuse:
+            return False
+        return self.engine.prime(cache_key, list(token_ids))
+
     def completion(
         self,
         context_ids: List[int],
@@ -356,4 +454,5 @@ class JaxLLMService:
             reused_tokens=res.reused_tokens,
             prefill_tokens=res.prefill_tokens,
             cache_update_ms=res.cache_update_ms,
+            warm_start=res.warm_start,
         )

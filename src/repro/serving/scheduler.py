@@ -7,6 +7,17 @@ one batched KV cache. Incoming requests prefill into a free slot (B=1
 prefill, inserted at the slot index); every step() decodes all occupied
 slots in a single jitted call. Finished sequences free their slot for the
 next queued request — the standard vLLM-style loop, minus paging.
+
+The scheduler can share a :class:`~repro.serving.session_cache.
+SessionCachePool` with the rest of the node (``session_pool``): a request
+submitted with a ``cache_key`` prefix-matches the pool on admission and,
+on a hit, chunk-prefills only its new-token suffix into the slot
+(:func:`repro.models.prefill_append`) instead of prefilling from scratch;
+when the request finishes, its slot's KV state is written back to the pool
+under the same key. This closes the loop with the migration warm-start
+path (docs/architecture.md, "Migration warm-start"): a context primed on
+replication arrival speeds up the continuous-batching path too, not just
+the single-stream Context Manager path.
 """
 
 from __future__ import annotations
@@ -20,9 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import ModelConfig, decode_step, make_decode_caches, prefill
+from ..models import ModelConfig, decode_step, make_decode_caches, prefill, prefill_append
+from ..models.cache import trim_kv_pos
 from ..tokenizer import EOS, IM_END
+from .engine import chunked_append
 from .sampling import sample
+from .session_cache import CacheEntry, SessionCachePool
 
 
 @dataclass
@@ -32,6 +46,10 @@ class SlotState:
     generated: List[int] = field(default_factory=list)
     max_new: int = 128
     done: bool = False
+    # session-pool bookkeeping (None when submitted without a cache_key)
+    cache_key: Optional[str] = None
+    token_ids: List[int] = field(default_factory=list)
+    reused_tokens: int = 0
 
 
 @dataclass
@@ -40,6 +58,9 @@ class FinishedRequest:
     token_ids: List[int]
     submitted_at: float
     finished_at: float
+    # session-KV reuse accounting (0 / False without a pool hit)
+    cache_hit: bool = False
+    reused_tokens: int = 0
 
 
 class BatchedServer:
@@ -50,6 +71,7 @@ class BatchedServer:
         n_slots: int = 4,
         max_len: int = 512,
         stop_tokens=(EOS, IM_END),
+        session_pool: Optional[SessionCachePool] = None,
     ) -> None:
         assert cfg.attn_variant == "full" and cfg.arch_type in ("dense", "moe", "vlm"), (
             "batched server currently supports full-cache attention archs"
@@ -57,6 +79,7 @@ class BatchedServer:
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.stop_tokens = set(stop_tokens)
+        self.session_pool = session_pool
         self.caches = make_decode_caches(cfg, n_slots, max_len, dtype=jnp.float32
                                          if cfg.compute_dtype == "float32" else None)
         self.slots: List[Optional[SlotState]] = [None] * n_slots
@@ -70,19 +93,29 @@ class BatchedServer:
         def _prefill_one(params, tokens, true_len):
             return prefill(params, cfg, tokens, max_len=max_len, true_len=true_len)
 
+        @jax.jit
+        def _append_one(params, caches, tokens, p0, true_len):
+            return prefill_append(params, cfg, caches, tokens, p0, true_len=true_len)
+
         @partial(jax.jit, donate_argnums=(1,))
         def _decode(params, caches, tokens, pos):
             return decode_step(params, cfg, caches, tokens, pos)
 
         self._prefill_one = _prefill_one
+        self._append_one = _append_one
         self._decode = _decode
         self._pos = jnp.zeros((n_slots,), jnp.int32)
 
     # ------------------------------------------------------------------
-    def submit(self, token_ids: List[int], max_new: int = 32) -> int:
+    def submit(
+        self, token_ids: List[int], max_new: int = 32, cache_key: Optional[str] = None
+    ) -> int:
+        """Queue a request. With ``cache_key`` and a ``session_pool``, the
+        request reuses any cached KV prefix for that key on admission and
+        registers its final KV state back under the key on completion."""
         rid = self._req_seq
         self._req_seq += 1
-        self.queue.append((rid, list(token_ids), max_new))
+        self.queue.append((rid, list(token_ids), max_new, cache_key))
         self._submit_times[rid] = time.perf_counter()
         return rid
 
@@ -90,14 +123,36 @@ class BatchedServer:
     def busy(self) -> bool:
         return any(s is not None for s in self.slots) or bool(self.queue)
 
-    def _insert_slot(self, idx: int, rid: int, ids: List[int], max_new: int) -> None:
+    # -- slot admission -------------------------------------------------
+    def _insert_slot(
+        self, idx: int, rid: int, ids: List[int], max_new: int,
+        cache_key: Optional[str] = None,
+    ) -> None:
         n = len(ids)
-        s = min(self.max_len, max(16, n))
-        toks = np.zeros((1, s), np.int32)
-        toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
-        logits, one_caches, pos = self._prefill_one(
-            self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
-        )
+        # Loud capacity check for BOTH admission paths: the reuse path's
+        # scatter writes use mode="drop" and would otherwise silently lose
+        # KV past max_len and register a poisoned pool entry.
+        assert n < self.max_len, (n, self.max_len)
+        entry, usable = None, 0
+        if self.session_pool is not None and cache_key is not None:
+            entry, usable = self.session_pool.match(cache_key, ids)
+        if entry is not None and usable > 0:
+            base = entry.caches
+            if usable < entry.pos:
+                base = [
+                    {"k": c["k"], "v": c["v"],
+                     "kv_pos": trim_kv_pos(c["kv_pos"], jnp.array([usable], jnp.int32))}
+                    for c in base
+                ]
+            logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
+        else:
+            usable = 0
+            s = min(self.max_len, max(16, n))
+            toks = np.zeros((1, s), np.int32)
+            toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
+            logits, one_caches, pos = self._prefill_one(
+                self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
+            )
 
         new_caches = []
         for big, small in zip(self.caches, one_caches):
@@ -112,7 +167,19 @@ class BatchedServer:
         self.caches = new_caches
         self._pos = self._pos.at[idx].set(int(pos[0]))
         self._next_tok[idx] = int(jnp.argmax(logits[0]))
-        self.slots[idx] = SlotState(request_id=rid, pos=n, max_new=max_new)
+        self.slots[idx] = SlotState(
+            request_id=rid, pos=n, max_new=max_new,
+            cache_key=cache_key, token_ids=list(ids), reused_tokens=usable,
+        )
+
+    def _append_suffix(self, caches, suffix_ids: List[int], p0: int):
+        """Chunk-prefill ``suffix_ids`` into B=1 ``caches`` starting at p0
+        (the reuse path of slot admission; smaller chunks/buckets than the
+        single-stream engine — batched requests tend to be short)."""
+        return chunked_append(
+            self._append_one, self.params, caches, suffix_ids, p0,
+            self.cfg.vocab_size, chunk=128, bucket=16,
+        )
 
     @staticmethod
     def _put_entry(big: jnp.ndarray, small: jnp.ndarray, idx: int, name: str):
@@ -125,13 +192,33 @@ class BatchedServer:
         # ssm states: (L,B,...)
         return big.at[:, idx].set(small[:, 0])
 
+    # -- slot completion -> pool write-back -----------------------------
+    def _release_to_pool(self, idx: int, st: SlotState) -> None:
+        """Copy the finished slot's KV lane out of the batched caches and
+        register it in the session pool: the next turn of this session —
+        on this path or the single-stream engine path — is suffix-only."""
+        prefix = st.token_ids + st.generated
+        n_valid = jnp.array([len(prefix)], jnp.int32)
+        one = []
+        for c in self.caches:
+            if not isinstance(c, dict) or "kv_pos" not in c:
+                return  # non-full-cache group: skip pooling entirely
+            one.append({
+                "k": c["k"][:, idx : idx + 1],
+                "v": c["v"][:, idx : idx + 1],
+                "kv_pos": trim_kv_pos(c["kv_pos"][idx : idx + 1], n_valid),
+            })
+        self.session_pool.put(
+            st.cache_key, CacheEntry(token_ids=prefix, caches=one, source="serve")
+        )
+
     def step(self) -> None:
         """One scheduler tick: admit queued work into free slots, then decode
         every occupied slot in a single batched call."""
         for idx in range(self.n_slots):
             if self.slots[idx] is None and self.queue:
-                rid, ids, max_new = self.queue.pop(0)
-                self._insert_slot(idx, rid, ids, max_new)
+                rid, ids, max_new, cache_key = self.queue.pop(0)
+                self._insert_slot(idx, rid, ids, max_new, cache_key)
         if not any(s is not None for s in self.slots):
             return
 
@@ -151,12 +238,16 @@ class BatchedServer:
                 or len(st.generated) >= st.max_new
                 or st.pos >= self.max_len - 1
             ):
+                if self.session_pool is not None and st.cache_key is not None:
+                    self._release_to_pool(idx, st)
                 self.finished.append(
                     FinishedRequest(
                         st.request_id,
                         st.generated,
                         self._submit_times.pop(st.request_id),
                         time.perf_counter(),
+                        cache_hit=st.reused_tokens > 0,
+                        reused_tokens=st.reused_tokens,
                     )
                 )
                 self.slots[idx] = None

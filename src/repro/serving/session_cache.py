@@ -13,6 +13,13 @@ entry is only reused when its stored token prefix exactly matches the head
 of the incoming ``context_ids + prompt_ids`` (longest-common-prefix check);
 any mismatch — stale replica, edited history, truncated context — drops the
 entry and falls back to a from-scratch prefill.
+
+Entries carry their provenance (``source``): ``"serve"`` for caches left
+behind by a turn served on this node, ``"prime"`` for caches installed by
+the migration warm-start hook (:meth:`repro.serving.engine.InferenceEngine.
+prime` — the replication-arrival path that pre-warms a keygroup peer before
+a roaming client's first turn lands there). See docs/architecture.md,
+"Migration warm-start", for the full request lifecycle.
 """
 
 from __future__ import annotations
@@ -33,10 +40,14 @@ def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
 @dataclass
 class CacheEntry:
     """KV state for the token prefix ``token_ids``; ``caches`` is the
-    models-layer cache pytree with kv_pos trimmed to ``pos``."""
+    models-layer cache pytree with kv_pos trimmed to ``pos``. ``source``
+    records how the entry got here: ``"serve"`` (left behind by a turn
+    served on this node) or ``"prime"`` (installed by the migration
+    warm-start hook on context-replication arrival)."""
 
     token_ids: List[int]
     caches: List[Dict]
+    source: str = "serve"
 
     @property
     def pos(self) -> int:
@@ -53,6 +64,7 @@ class SessionCachePool:
     misses: int = 0
     evictions: int = 0
     invalidations: int = 0
+    primes: int = 0  # warm-start installs/extensions via InferenceEngine.prime
     _entries: "OrderedDict[str, CacheEntry]" = field(
         default_factory=OrderedDict, repr=False
     )
@@ -93,14 +105,27 @@ class SessionCachePool:
         self.hits += 1
         return entry, usable
 
-    def put(self, key: str, entry: CacheEntry) -> None:
+    def put(self, key: str, entry: CacheEntry, low_priority: bool = False) -> None:
+        """Insert/replace an entry. ``low_priority`` (the warm-start prime
+        path) inserts at the LRU end instead of the MRU end: a prime for a
+        session that *might* roam here must never evict this node's hot
+        serve entries — on a full pool the prime itself is the next victim,
+        and the serving working set stays intact. The first serving hit
+        promotes a kept prime to MRU like any other entry."""
         if self.capacity <= 0:
             return
         self._entries[key] = entry
-        self._entries.move_to_end(key)
+        self._entries.move_to_end(key, last=not low_priority)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
+
+    def peek(self, key: str) -> Optional[CacheEntry]:
+        """Return the entry for ``key`` without touching LRU order or the
+        hit/miss counters — the warm-start prime path uses this to decide
+        between a fresh prefill and a delta extension of what is already
+        cached, without polluting serving-path statistics."""
+        return self._entries.get(key)
 
     def invalidate(self, key: str) -> None:
         self._entries.pop(key, None)
@@ -115,4 +140,5 @@ class SessionCachePool:
             "misses": self.misses,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "primes": self.primes,
         }
