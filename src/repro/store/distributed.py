@@ -1,16 +1,26 @@
 """FReD-like geo-distributed KV store (paper §2.2.1/§3.3).
 
+Implements the storage layer of a DisCEdge deployment — the component the
+paper realizes with FReD keygroups (see docs/architecture.md, "Replication
+and keygroups"):
+
 - *Keygroups*: one per language model; context replicates only among nodes
-  serving that model.
+  serving that model (paper §3.3).
 - Peer-to-peer asynchronous replication over the network simulator; arrival
   times depend on value size → tokenized contexts genuinely sync faster than
   raw text (the paper's Fig. 5 effect).
 - TTL per keygroup for automatic stale-context cleanup; explicit delete for
-  the client-requested path.
+  the client-requested path (§3.3).
 - Replication mode ``full`` ships the whole value on every write (what the
   paper's prototype does); ``delta`` is our beyond-paper optimization that
   ships only the token suffix since the peer's last acknowledged version
   (LLM context grows monotonically — §2.2.2).
+- *Notify-on-apply*: a node can subscribe to replicated writes landing on
+  its local replica (:meth:`DistributedKVStore.on_apply`). EdgeNode uses
+  this as the migration warm-start hook — on context-replication arrival it
+  pre-warms the serving engine's session KV pool so a roaming client's
+  first turn on this node prefills only its new tokens
+  (docs/architecture.md, "Migration warm-start").
 """
 
 from __future__ import annotations
@@ -60,6 +70,9 @@ class DistributedKVStore:
         self._replicas: Dict[Tuple[str, str], Replica] = {}
         # (keygroup, key, src, dst) -> last version successfully shipped
         self._peer_acked: Dict[Tuple[str, str, str, str], int] = {}
+        # node -> hooks fired when a replicated write applies on that node's
+        # replica (the EdgeNode warm-start subscription)
+        self._apply_hooks: Dict[str, List[Callable[[str, str, VersionedValue], None]]] = {}
         self.replicated_writes = 0
         self.dropped_stale_applies = 0
 
@@ -83,6 +96,21 @@ class DistributedKVStore:
 
     def replica(self, node: str, keygroup: str) -> Replica:
         return self._replicas[(node, keygroup)]
+
+    # -- replication-arrival subscription ------------------------------------
+    def on_apply(
+        self, node: str, hook: Callable[[str, str, VersionedValue], None]
+    ) -> None:
+        """Subscribe ``hook(keygroup, key, value)`` to replicated writes that
+        successfully apply on ``node``'s local replica. Fired *after* the
+        last-writer-wins version check — stale deliveries never notify.
+        Local writes by ``node`` itself do not notify either (the writing
+        node already holds whatever state the hook would rebuild)."""
+        self._apply_hooks.setdefault(node, []).append(hook)
+
+    def _notify_apply(self, node: str, keygroup: str, key: str, vv: VersionedValue) -> None:
+        for hook in self._apply_hooks.get(node, ()):
+            hook(keygroup, key, vv)
 
     # -- client-facing ops (called by the Context Manager, paper §3.3) -------
     def get(self, node: str, keygroup: str, key: str) -> Optional[VersionedValue]:
@@ -109,8 +137,16 @@ class DistributedKVStore:
             snapshot = value.copy() if hasattr(value, "copy") else value
             shipped = VersionedValue(snapshot, version, now, kg.ttl_ms, node)
 
-            def deliver(r: Replica = replica, k: str = key, v: VersionedValue = shipped) -> None:
-                if not r.apply_replicated(k, v):
+            def deliver(
+                r: Replica = replica,
+                k: str = key,
+                v: VersionedValue = shipped,
+                p: str = peer,
+                g: str = keygroup,
+            ) -> None:
+                if r.apply_replicated(k, v):
+                    self._notify_apply(p, g, k, v)
+                else:
                     self.dropped_stale_applies += 1
 
             arrivals[peer] = self.network.send_async(
