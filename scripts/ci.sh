@@ -11,6 +11,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== fast gate: pytest -q -m 'not slow' =="
 python -m pytest -q -m "not slow"
 
+echo "== smoke: concurrent multi-client submit/await (echo, no device work) =="
+python -m benchmarks.concurrency_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts warm-start roam) =="
 python examples/quickstart.py > /dev/null
 

@@ -12,6 +12,7 @@ from .protocol import (
     Request,
     Response,
     StaleContextError,
+    Ticket,
     Timing,
 )
 from .tokens import RawContext, TokenizedContext
@@ -22,8 +23,14 @@ from .consistency import (
     check_monotonic_reads,
     check_read_your_writes,
     read_with_turn_check,
+    read_with_turn_check_async,
 )
-from .manager import ContextManager, ServiceResult
+from .manager import (
+    ContextManager,
+    PreparedTurn,
+    ServiceCapabilities,
+    ServiceResult,
+)
 
 __all__ = [
     "ConsistencyPolicy",
@@ -31,6 +38,7 @@ __all__ = [
     "Request",
     "Response",
     "StaleContextError",
+    "Ticket",
     "Timing",
     "RawContext",
     "TokenizedContext",
@@ -44,6 +52,9 @@ __all__ = [
     "check_monotonic_reads",
     "check_read_your_writes",
     "read_with_turn_check",
+    "read_with_turn_check_async",
     "ContextManager",
+    "PreparedTurn",
+    "ServiceCapabilities",
     "ServiceResult",
 ]

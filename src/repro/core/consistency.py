@@ -13,7 +13,7 @@ retries ever needed. Both knobs are configurable here.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 from ..store.distributed import DistributedKVStore
 from ..store.kvstore import VersionedValue
@@ -73,6 +73,48 @@ def read_with_turn_check(
             )
         return ReadResult(vv, retries, wait_ms, stale=True)
     return ReadResult(vv, retries, wait_ms, stale=False)
+
+
+def read_with_turn_check_async(
+    store: DistributedKVStore,
+    node: str,
+    keygroup: str,
+    key: str,
+    required_turn: int,
+    on_ready: Callable[[ReadResult], None],
+    policy: ConsistencyPolicy = ConsistencyPolicy.STRONG,
+    retry: RetryPolicy = RetryPolicy(),
+) -> None:
+    """Event-driven twin of :func:`read_with_turn_check` for the submit/await
+    serving path: instead of *advancing* the shared clock during backoff
+    (which would fast-forward every other tenant's in-flight turn), each
+    retry is a scheduled event ``backoff_ms`` in the future. Replication
+    deliveries that arrive inside the backoff window are applied by the event
+    loop in timestamp order before the retry fires — the same 'wait for
+    replication to land' semantics, now overlapping with other tenants' work.
+
+    ``on_ready`` fires with the :class:`ReadResult`; a STRONG-policy miss
+    after the retry budget is reported as ``ReadResult(stale=True)`` with
+    ``value`` possibly behind — the caller converts it to the protocol error
+    (the split keeps this function exception-free inside event callbacks).
+    """
+    net = store.network
+
+    def behind_turn(v) -> bool:
+        return (v.version if v is not None else 0) < required_turn
+
+    def attempt(retries: int, wait_ms: float) -> None:
+        vv = store.get(node, keygroup, key)
+        if behind_turn(vv) and retries < retry.max_retries:
+            net.schedule(
+                net.clock.now_ms + retry.backoff_ms,
+                lambda: attempt(retries + 1, wait_ms + retry.backoff_ms),
+            )
+            return
+        stale = behind_turn(vv) and required_turn > 0
+        on_ready(ReadResult(vv, retries, wait_ms, stale=stale))
+
+    attempt(0, 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -15,26 +15,47 @@ Service. It owns the context lifecycle:
   so the update never sits on the client-observable path (§4.1/§4.2.1);
 - passes the session's context key to the LLM Service as ``cache_key``, so
   engines with a session-level KV cache (repro.serving.engine) can reuse
-  the KV state of the stored token prefix and prefill only the new tokens
-  — the paper's "store tokenized" idea extended one level down the stack.
-  Per-request reuse accounting lands in ``Timing`` (kv_cache_hit,
-  kv_reused_tokens, prefill_tokens).
+  the KV state of the stored token prefix and prefill only the new tokens.
+
+Since the submit/await redesign (docs/architecture.md, "Async serving
+path"), request processing is split into three event-driven phases riding
+the discrete-event :class:`~repro.store.network.Network` clock, so context
+reads, inference, and replication from *different tenants* genuinely
+overlap:
+
+- :meth:`ContextManager.submit` → **prepare**: id assignment, the
+  consistency read (backoff retries are *scheduled events*, not clock
+  advances), and tokenization of the new prompt;
+- **infer**: the asynchronous :meth:`LLMServiceProtocol.submit` call — the
+  service schedules its completion on the sim clock, modelling queueing
+  delay and (for batched services) a shared decode batch;
+- **finish**: response construction plus the asynchronous context write,
+  which replicates to keygroup peers off the client-observable path.
+
+:meth:`handle` remains as a thin blocking shim (submit + drive the event
+loop until this one turn resolves) so single-tenant callers and the paper's
+serialized benchmarks are unchanged.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Protocol, Tuple
+from typing import Callable, List, Optional, Protocol, Tuple
 
 from ..store.distributed import DistributedKVStore
+from ..store.network import Network
 from ..tokenizer import (
     ByteLevelBPE,
     assistant_header,
     encode_turn,
     render_turn,
 )
-from .consistency import ReadResult, RetryPolicy, read_with_turn_check
+from .consistency import (
+    ReadResult,
+    RetryPolicy,
+    read_with_turn_check_async,
+)
 from .protocol import (
     ConsistencyPolicy,
     ContextMode,
@@ -47,13 +68,57 @@ from .session import context_key, fresh_session_id, fresh_user_id
 from .tokens import RawContext, TokenizedContext
 
 
+@dataclass(frozen=True)
+class ServiceCapabilities:
+    """What an LLM Service implementation can do, declared up front instead
+    of discovered by ``hasattr`` duck-typing.
+
+    - ``prime``: supports migration warm-start priming of a session KV pool
+      (:meth:`LLMServiceProtocol.prime`); the EdgeNode only subscribes its
+      replication-arrival hook when this is set.
+    - ``kv_reuse``: honors ``cache_key`` with session-level KV-cache reuse
+      (hit turns prefill only the new-token suffix).
+    - ``batched``: concurrent sessions share one continuous decode batch
+      (``Timing.batch_size`` can exceed 1).
+    - ``n_slots``: concurrent inference streams/slots; requests beyond this
+      queue (``Timing.queue_ms``).
+    """
+
+    prime: bool = False
+    kv_reuse: bool = False
+    batched: bool = False
+    n_slots: int = 1
+
+
 class LLMServiceProtocol(Protocol):
     """Paper §3.2 — any inference framework that (1) accepts a pre-tokenized
     'context' parameter next to the prompt tokens and (2) serves the same
-    model/tokenizer as its keygroup peers."""
+    model/tokenizer as its keygroup peers.
+
+    The serving entrypoint is the asynchronous :meth:`submit`: the service
+    performs (or models) the work and schedules ``on_done(result)`` on the
+    network's event clock at the request's completion time, accounting
+    queueing delay and batch sharing in the result. :meth:`completion` is
+    the legacy blocking form (contention-free; kept for direct callers and
+    micro-benchmarks). :meth:`capabilities` declares optional features —
+    :meth:`prime` is only called when ``capabilities().prime`` is True.
+    """
 
     model: str
     tokenizer: ByteLevelBPE
+
+    def capabilities(self) -> ServiceCapabilities: ...
+
+    def submit(
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
+        *,
+        net: Network,
+        on_done: Callable[["ServiceResult"], None],
+    ) -> None: ...
 
     def completion(
         self,
@@ -62,6 +127,8 @@ class LLMServiceProtocol(Protocol):
         max_new_tokens: int,
         cache_key: Optional[str] = None,
     ) -> "ServiceResult": ...
+
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool: ...
 
 
 @dataclass
@@ -79,6 +146,26 @@ class ServiceResult:
     # warm-start hook (replication arrival primed the pool) rather than by a
     # turn served on this node — see docs/architecture.md.
     warm_start: bool = False
+    # Multi-tenant accounting (submit path): sim time spent queued for a
+    # free stream/slot, and the peak decode batch this request shared.
+    queue_ms: float = 0.0
+    batch_size: int = 1
+
+
+@dataclass
+class PreparedTurn:
+    """Output of the *prepare* phase: everything the infer phase needs."""
+
+    req: Request
+    user_id: str
+    session_id: str
+    key: str
+    timing: Timing
+    context_ids: List[int]
+    prompt_ids: List[int]
+    stored_tok: Optional[TokenizedContext] = None
+    stored_raw: Optional[RawContext] = None
+    stale: bool = False
 
 
 @dataclass
@@ -107,22 +194,30 @@ class ContextManager:
     def keygroup(self) -> str:
         return self.service.model
 
+    # -- blocking shim ----------------------------------------------
     def handle(self, req: Request) -> Response:
-        """Process one client request end to end (network legs are accounted
-        by the EdgeNode/client wrappers; this method covers tokenize, context
-        read, inference, and the async update)."""
+        """Blocking compatibility shim over the submit/await path: submit
+        the request and drive the event loop until *this* turn resolves
+        (events past it — in-flight replication, other tenants' turns —
+        stay pending, exactly like the pre-async serialized path)."""
+        net = self.store.network
+        box: List[Response] = []
+        self.submit(req, box.append)
+        net.run_until(lambda: bool(box))
+        assert box, "request did not resolve"
+        return box[0]
+
+    # -- phase 1: prepare -------------------------------------------
+    def submit(self, req: Request, on_done: Callable[[Response], None]) -> None:
+        """Event-driven entrypoint: run the prepare phase now (at the
+        request's node-arrival time) and schedule the infer/finish phases;
+        ``on_done(response)`` fires at response-completion sim time."""
         net = self.store.network
         timing = Timing()
         user_id = req.user_id or fresh_user_id()
         session_id = req.session_id or fresh_session_id()
         key = context_key(user_id, session_id)
         tok = self.tokenizer
-
-        stale = False
-        context_ids: List[int] = []
-        prompt_ids: List[int] = []
-        stored_tok: Optional[TokenizedContext] = None
-        stored_raw: Optional[RawContext] = None
 
         if req.mode is ContextMode.CLIENT_SIDE:
             # History ships with the request; tokenize all of it, every time.
@@ -133,21 +228,36 @@ class ContextManager:
             full.extend(encode_turn(tok, "user", req.prompt))
             full.extend(assistant_header(tok))
             timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
-            prompt_ids = full
-        else:
-            # Edge-side context: consistency-checked read from local replica.
-            try:
-                rr = self._read_context(key, req.turn, req.policy)
-            except StaleContextError as e:
-                return Response(
-                    text="", user_id=user_id, session_id=session_id,
-                    turn=req.turn, served_by=self.node_id,
-                    n_prompt_tokens=0, n_context_tokens=0, n_generated_tokens=0,
-                    timing=timing, error=str(e),
-                )
+            pt = PreparedTurn(
+                req=req, user_id=user_id, session_id=session_id, key=key,
+                timing=timing, context_ids=[], prompt_ids=full,
+            )
+            net.schedule(
+                net.clock.now_ms + timing.tokenize_ms,
+                lambda: self._infer(pt, on_done),
+            )
+            return
+
+        # Edge-side context: consistency-checked read from the local
+        # replica. Retries are scheduled events — replication landing
+        # inside a backoff window is applied (in timestamp order) before
+        # the retry fires, and other tenants keep making progress.
+        def resume(rr: ReadResult) -> None:
             timing.context_read_ms = rr.wait_ms
             timing.retries = rr.retries
-            stale = rr.stale
+            if rr.stale and req.policy is ConsistencyPolicy.STRONG:
+                err = StaleContextError(
+                    f"replica {self.node_id}/{self.keygroup}/{key} at turn "
+                    f"{getattr(rr.value, 'version', None)} < client turn "
+                    f"{req.turn} after {rr.retries} retries"
+                )
+                on_done(Response(
+                    text="", user_id=user_id, session_id=session_id,
+                    turn=req.turn, served_by=self.node_id,
+                    n_prompt_tokens=0, n_context_tokens=0,
+                    n_generated_tokens=0, timing=timing, error=str(err),
+                ))
+                return
             # Migration detection: the stored context was last written by a
             # peer node — the client roamed here since its previous turn.
             timing.migrated = bool(
@@ -155,102 +265,137 @@ class ContextManager:
                 and rr.value.origin
                 and rr.value.origin != self.node_id
             )
+            pt = self._tokenize_after_read(
+                req, rr, user_id, session_id, key, timing
+            )
+            net.schedule(
+                net.clock.now_ms + timing.tokenize_ms,
+                lambda: self._infer(pt, on_done),
+            )
 
-            if req.mode is ContextMode.TOKENIZED:
-                stored_tok = (
-                    rr.value.value.copy() if rr.value is not None
-                    else TokenizedContext(model=req.model)
-                )
-                context_ids = list(stored_tok.ids)
-                t0 = time.perf_counter()
-                prompt_ids = encode_turn(tok, "user", req.prompt)
-                prompt_ids.extend(assistant_header(tok))
-                timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
-            else:  # RAW: re-render + re-tokenize the whole history
-                stored_raw = (
-                    rr.value.value.copy() if rr.value is not None
-                    else RawContext(model=req.model)
-                )
-                t0 = time.perf_counter()
-                ctx_ids = tok.encode(stored_raw.text)
-                new_ids = encode_turn(tok, "user", req.prompt)
-                new_ids.extend(assistant_header(tok))
-                timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
-                # raw mode sends everything as one prompt (context param empty)
-                prompt_ids = ctx_ids + new_ids
-                context_ids = []
-
-        # Clock discipline: tokenize + read time pass on the sim clock.
-        net.advance(timing.tokenize_ms)
-
-        # The session's context key doubles as the LLM Service's KV-cache
-        # key: services with a session cache (repro.serving.engine) reuse
-        # the KV state of the stored token prefix and prefill only the new
-        # tokens — correctness is guarded by the service's prefix match.
-        result = self.service.completion(
-            context_ids=context_ids,
-            prompt_ids=prompt_ids,
-            max_new_tokens=req.max_new_tokens,
-            cache_key=key,
+        read_with_turn_check_async(
+            self.store, self.node_id, self.keygroup, key, req.turn,
+            resume, policy=req.policy, retry=self.retry,
         )
+
+    def _tokenize_after_read(
+        self,
+        req: Request,
+        rr: ReadResult,
+        user_id: str,
+        session_id: str,
+        key: str,
+        timing: Timing,
+    ) -> PreparedTurn:
+        """Second half of prepare: build model input from the read context
+        (only the new prompt is tokenized in TOKENIZED mode — the paper's
+        core saving)."""
+        tok = self.tokenizer
+        if req.mode is ContextMode.TOKENIZED:
+            stored_tok = (
+                rr.value.value.copy() if rr.value is not None
+                else TokenizedContext(model=req.model)
+            )
+            context_ids = list(stored_tok.ids)
+            t0 = time.perf_counter()
+            prompt_ids = encode_turn(tok, "user", req.prompt)
+            prompt_ids.extend(assistant_header(tok))
+            timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
+            return PreparedTurn(
+                req=req, user_id=user_id, session_id=session_id, key=key,
+                timing=timing, context_ids=context_ids, prompt_ids=prompt_ids,
+                stored_tok=stored_tok, stale=rr.stale,
+            )
+        # RAW: re-render + re-tokenize the whole history
+        stored_raw = (
+            rr.value.value.copy() if rr.value is not None
+            else RawContext(model=req.model)
+        )
+        t0 = time.perf_counter()
+        ctx_ids = tok.encode(stored_raw.text)
+        new_ids = encode_turn(tok, "user", req.prompt)
+        new_ids.extend(assistant_header(tok))
+        timing.tokenize_ms = (time.perf_counter() - t0) * 1e3 * self.tokenize_scale
+        # raw mode sends everything as one prompt (context param empty)
+        return PreparedTurn(
+            req=req, user_id=user_id, session_id=session_id, key=key,
+            timing=timing, context_ids=[], prompt_ids=ctx_ids + new_ids,
+            stored_raw=stored_raw, stale=rr.stale,
+        )
+
+    # -- phase 2: infer ---------------------------------------------
+    def _infer(self, pt: PreparedTurn, on_done: Callable[[Response], None]) -> None:
+        """Hand the prepared input to the LLM Service. The session's context
+        key doubles as the service's KV-cache key: services with a session
+        pool reuse the stored prefix's KV state and prefill only the new
+        tokens — correctness is guarded by the service's prefix match. The
+        service schedules completion (queueing + inference) on the sim
+        clock; ``_finish`` runs at that time."""
+        self.service.submit(
+            context_ids=pt.context_ids,
+            prompt_ids=pt.prompt_ids,
+            max_new_tokens=pt.req.max_new_tokens,
+            cache_key=pt.key,
+            net=self.store.network,
+            on_done=lambda result: self._finish(pt, result, on_done),
+        )
+
+    # -- phase 3: finish --------------------------------------------
+    def _finish(
+        self,
+        pt: PreparedTurn,
+        result: ServiceResult,
+        on_done: Callable[[Response], None],
+    ) -> None:
+        """Build the response and perform the asynchronous context update
+        (local write + async replication) — after the response, off the
+        client-observable path (§4.2.1)."""
+        req, timing, tok = pt.req, pt.timing, self.tokenizer
         timing.inference_ms = result.inference_ms
+        timing.queue_ms = result.queue_ms
+        timing.batch_size = result.batch_size
         timing.kv_cache_hit = result.cache_hit
         timing.kv_reused_tokens = result.reused_tokens
         timing.prefill_tokens = result.prefill_tokens
         timing.kv_warm_start = result.warm_start
-        net.advance(result.inference_ms)
 
-        n_ctx = len(context_ids) if req.mode is ContextMode.TOKENIZED else 0
+        n_ctx = len(pt.context_ids) if req.mode is ContextMode.TOKENIZED else 0
         resp = Response(
             text=result.text,
-            user_id=user_id,
-            session_id=session_id,
+            user_id=pt.user_id,
+            session_id=pt.session_id,
             turn=req.turn + 1,
             served_by=self.node_id,
-            n_prompt_tokens=len(prompt_ids),
+            n_prompt_tokens=len(pt.prompt_ids),
             n_context_tokens=n_ctx,
             n_generated_tokens=len(result.token_ids),
             timing=timing,
-            stale=stale,
+            stale=pt.stale,
         )
 
-        # Asynchronous context update — after the response, off the hot path.
         if req.mode is not ContextMode.CLIENT_SIDE:
             t0 = time.perf_counter()
             if req.mode is ContextMode.TOKENIZED:
-                assert stored_tok is not None
-                stored_tok.extend(encode_turn(tok, "user", req.prompt))
-                stored_tok.extend(assistant_header(tok))
-                stored_tok.extend(result.token_ids)  # already tokens — free
-                stored_tok.commit_turn()
-                new_value: object = stored_tok
-                version = stored_tok.turn
+                assert pt.stored_tok is not None
+                pt.stored_tok.extend(encode_turn(tok, "user", req.prompt))
+                pt.stored_tok.extend(assistant_header(tok))
+                pt.stored_tok.extend(result.token_ids)  # already tokens — free
+                pt.stored_tok.commit_turn()
+                new_value: object = pt.stored_tok
+                version = pt.stored_tok.turn
             else:
-                assert stored_raw is not None
-                stored_raw.extend(render_turn("user", req.prompt))
-                stored_raw.extend(render_turn("assistant", result.text))
-                stored_raw.commit_turn()
-                new_value = stored_raw
-                version = stored_raw.turn
+                assert pt.stored_raw is not None
+                pt.stored_raw.extend(render_turn("user", req.prompt))
+                pt.stored_raw.extend(render_turn("assistant", result.text))
+                pt.stored_raw.commit_turn()
+                new_value = pt.stored_raw
+                version = pt.stored_raw.turn
             timing.async_update_ms = (time.perf_counter() - t0) * 1e3
             # local write + async replication to keygroup peers
-            self.store.put(self.node_id, self.keygroup, key, new_value, version)
-        return resp
+            self.store.put(self.node_id, self.keygroup, pt.key, new_value, version)
+        on_done(resp)
 
     # ---------------------------------------------------------------
-    def _read_context(
-        self, key: str, required_turn: int, policy: ConsistencyPolicy
-    ) -> ReadResult:
-        return read_with_turn_check(
-            self.store,
-            self.node_id,
-            self.keygroup,
-            key,
-            required_turn,
-            policy=policy,
-            retry=self.retry,
-        )
-
     def forget(self, user_id: str, session_id: str) -> None:
         """Client-requested context deletion (paper §3.3)."""
         self.store.delete(self.node_id, self.keygroup, context_key(user_id, session_id))

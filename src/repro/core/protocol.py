@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class ContextMode(enum.Enum):
@@ -77,15 +77,23 @@ class Timing:
     # prime), not by a turn previously served on this node.
     migrated: bool = False
     kv_warm_start: bool = False
+    # Multi-tenant serving (submit/await path): time the request sat in the
+    # LLM Service's queue waiting for a free stream/slot, and the peak decode
+    # batch size this request shared the engine with (1 = single-stream).
+    queue_ms: float = 0.0
+    batch_size: int = 1
 
     @property
     def response_time_ms(self) -> float:
         """Client-observable end-to-end response time (paper Figs. 3/6).
-        The async context update is excluded by design (paper §4.2.1)."""
+        The async context update is excluded by design (paper §4.2.1);
+        queueing delay inside the LLM Service is client-observable and
+        included."""
         return (
             self.network_up_ms
             + self.tokenize_ms
             + self.context_read_ms
+            + self.queue_ms
             + self.inference_ms
             + self.network_down_ms
         )
@@ -119,3 +127,51 @@ class Response:
 class StaleContextError(RuntimeError):
     """STRONG policy: replica did not catch up to the client's turn counter
     within the retry budget (paper §3.3 — node notifies the client)."""
+
+
+@dataclass
+class Ticket:
+    """Handle for one in-flight request on the submit/await serving path.
+
+    Returned by :meth:`EdgeNode.submit` / :meth:`LLMClient.submit`. The
+    response materializes when the discrete-event loop reaches the turn's
+    completion (drive it with ``EdgeCluster.run_until_quiet()`` or
+    ``network.run_until(lambda: ticket.done)``). ``request`` is filled at
+    send time — a deferred submit (per-client think delay) builds its
+    Request when it actually fires, so the turn counter reflects every
+    earlier turn of the session."""
+
+    request: Optional[Request] = None
+    submitted_at_ms: float = 0.0
+    response: Optional[Response] = None
+    completed_at_ms: Optional[float] = None
+    _callbacks: List[Callable[["Ticket"], None]] = field(
+        default_factory=list, repr=False
+    )
+
+    @property
+    def done(self) -> bool:
+        return self.response is not None
+
+    @property
+    def latency_ms(self) -> float:
+        """Send-to-response sim time. ``submitted_at_ms`` is the scheduled
+        *send* time, so a deferred submit's think delay is excluded — this
+        is the client-observable turn latency, not time-since-decision."""
+        assert self.completed_at_ms is not None, "ticket not resolved yet"
+        return self.completed_at_ms - self.submitted_at_ms
+
+    def on_done(self, cb: Callable[["Ticket"], None]) -> None:
+        """Register a completion callback (fires immediately if done)."""
+        if self.done:
+            cb(self)
+        else:
+            self._callbacks.append(cb)
+
+    def resolve(self, response: Response, now_ms: float) -> None:
+        assert self.response is None, "ticket already resolved"
+        self.response = response
+        self.completed_at_ms = now_ms
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)

@@ -1,5 +1,5 @@
 from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
-from .client import CLIENT_HOST, LLMClient
+from .client import CLIENT_HOST, LLMClient, SessionTrace
 from .node import EdgeNode
 from .service import EchoLLMService
 
@@ -9,6 +9,7 @@ __all__ = [
     "EdgeCluster",
     "CLIENT_HOST",
     "LLMClient",
+    "SessionTrace",
     "EdgeNode",
     "EchoLLMService",
 ]

@@ -1,22 +1,47 @@
 """LLM client (paper §3.4): standard request format + user/session ids +
 the turn counter. The client picks its edge node per request (geo-aware
 routing is out of scope — the mobility benchmarks select nodes explicitly,
-like the paper's turn-3/5/7 switches)."""
+like the paper's turn-3/5/7 switches).
+
+Two ways to drive a conversation:
+
+- **submit/await** (the real path): :meth:`LLMClient.submit` schedules the
+  uplink, node processing, and downlink as discrete events and returns a
+  :class:`~repro.core.protocol.Ticket`; :meth:`LLMClient.run_session`
+  chains a whole multi-turn conversation with *per-client* think-time
+  events. Many clients' sessions interleave on the shared event clock —
+  drive them all with ``EdgeCluster.run_until_quiet()``.
+- **chat()** (blocking shim): submit one turn and drive the event loop
+  until it resolves — identical Responses to submit/await for a serialized
+  workload, kept so single-tenant callers read like the paper's setup.
+"""
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from ..core.protocol import (
     ConsistencyPolicy,
     ContextMode,
     Request,
     Response,
+    Ticket,
 )
 from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
 
 CLIENT_HOST = "client"
+
+
+@dataclass
+class SessionTrace:
+    """Progress of one client's chained multi-turn conversation (filled in
+    as the event loop runs — drive with ``EdgeCluster.run_until_quiet()``)."""
+
+    client: "LLMClient"
+    tickets: List[Ticket] = field(default_factory=list)
+    responses: List[Response] = field(default_factory=list)
+    done: bool = False
 
 
 @dataclass
@@ -34,43 +59,134 @@ class LLMClient:
     request_bytes_log: List[int] = field(default_factory=list)
     response_log: List[Response] = field(default_factory=list)
 
-    def chat(self, prompt: str, node_id: str) -> Response:
+    # -- submit/await -----------------------------------------------------
+    def submit(
+        self,
+        prompt: str,
+        node_id: str,
+        *,
+        delay_ms: float = 0.0,
+        on_response: Optional[Callable[[Response], None]] = None,
+    ) -> Ticket:
+        """Send one turn as a chain of events — uplink transfer, node-side
+        prepare/infer/finish, downlink transfer — and return its Ticket.
+        ``delay_ms`` defers the send (per-client think time: it delays
+        *this* client's next turn without advancing the shared clock, so
+        other tenants' in-flight turns are neither stalled nor
+        fast-forwarded). The Request is built when the send actually fires,
+        so a deferred turn carries the session state left by the previous
+        one."""
         net = self.cluster.network
-        req = Request(
-            prompt=prompt,
-            model=self.model,
-            user_id=self.user_id,
-            session_id=self.session_id,
-            turn=self.turn,
-            mode=self.mode,
-            policy=self.policy,
-            max_new_tokens=self.max_new_tokens,
-            client_history=list(self.history) if self.mode is ContextMode.CLIENT_SIDE else None,
-        )
-        up_bytes = req.wire_bytes()
-        self.request_bytes_log.append(up_bytes)
+        ticket = Ticket(submitted_at_ms=net.clock.now_ms + max(0.0, delay_ms))
 
-        up_ms = net.send(CLIENT_HOST, node_id, up_bytes, CLIENT_UP_TAG)
-        net.advance(up_ms)
+        def send() -> None:
+            req = Request(
+                prompt=prompt,
+                model=self.model,
+                user_id=self.user_id,
+                session_id=self.session_id,
+                turn=self.turn,
+                mode=self.mode,
+                policy=self.policy,
+                max_new_tokens=self.max_new_tokens,
+                client_history=(
+                    list(self.history)
+                    if self.mode is ContextMode.CLIENT_SIDE else None
+                ),
+            )
+            ticket.request = req
+            up_bytes = req.wire_bytes()
+            self.request_bytes_log.append(up_bytes)
+            up_ms = net.send(CLIENT_HOST, node_id, up_bytes, CLIENT_UP_TAG)
+            net.schedule(net.clock.now_ms + up_ms, lambda: arrive(req, up_ms))
 
-        resp = self.cluster.node(node_id).handle(req)
+        def arrive(req: Request, up_ms: float) -> None:
+            self.cluster.node(node_id).submit(
+                req, on_done=lambda resp: respond(resp, up_ms)
+            )
 
-        down_ms = net.send(node_id, CLIENT_HOST, resp.wire_bytes(), CLIENT_DOWN_TAG)
-        net.advance(down_ms)
-        resp.timing.network_up_ms = up_ms
-        resp.timing.network_down_ms = down_ms
+        def respond(resp: Response, up_ms: float) -> None:
+            down_ms = net.send(
+                node_id, CLIENT_HOST, resp.wire_bytes(), CLIENT_DOWN_TAG
+            )
+            resp.timing.network_up_ms = up_ms
+            resp.timing.network_down_ms = down_ms
+            net.schedule(net.clock.now_ms + down_ms, lambda: deliver(resp))
 
-        if resp.error is None:
-            # adopt server-assigned identifiers; bump the turn counter
-            self.user_id = resp.user_id
-            self.session_id = resp.session_id
-            self.turn = resp.turn
-            if self.mode is ContextMode.CLIENT_SIDE:
-                self.history.append(("user", prompt))
-                self.history.append(("assistant", resp.text))
-        self.response_log.append(resp)
-        return resp
+        def deliver(resp: Response) -> None:
+            if resp.error is None:
+                # adopt server-assigned identifiers; bump the turn counter
+                self.user_id = resp.user_id
+                self.session_id = resp.session_id
+                self.turn = resp.turn
+                if self.mode is ContextMode.CLIENT_SIDE:
+                    self.history.append(("user", prompt))
+                    self.history.append(("assistant", resp.text))
+            self.response_log.append(resp)
+            ticket.resolve(resp, net.clock.now_ms)
+            if on_response is not None:
+                on_response(resp)
+
+        if delay_ms > 0:
+            net.schedule(net.clock.now_ms + delay_ms, send)
+        else:
+            send()
+        return ticket
+
+    def run_session(
+        self,
+        turns: Sequence[Tuple[str, str]],
+        think_ms: float = 0.0,
+        on_turn: Optional[Callable[[int, Response], None]] = None,
+    ) -> SessionTrace:
+        """Chain a multi-turn conversation: turn ``i+1`` is sent
+        ``think_ms`` after turn ``i``'s response arrives at the client —
+        think time as a *per-client* event, never a shared-clock advance.
+        ``turns`` is a sequence of ``(prompt, node_id)`` pairs (the node
+        choice per turn models mobility, like the paper's switches). The
+        session stops early on a protocol error (e.g. a STRONG-policy
+        staleness failure); drive to completion with
+        ``EdgeCluster.run_until_quiet()``."""
+        trace = SessionTrace(client=self)
+
+        def launch(i: int, delay: float) -> None:
+            prompt, node_id = turns[i]
+            trace.tickets.append(self.submit(
+                prompt, node_id, delay_ms=delay,
+                on_response=lambda resp: advance(i, resp),
+            ))
+
+        def advance(i: int, resp: Response) -> None:
+            trace.responses.append(resp)
+            if on_turn is not None:
+                on_turn(i, resp)
+            if resp.error is None and i + 1 < len(turns):
+                launch(i + 1, think_ms)
+            else:
+                trace.done = True
+
+        if turns:
+            launch(0, 0.0)
+        else:
+            trace.done = True
+        return trace
+
+    # -- blocking shims ---------------------------------------------------
+    def chat(self, prompt: str, node_id: str) -> Response:
+        """Blocking compatibility shim over submit/await: submit the turn
+        and drive the event loop until *this* ticket resolves (events past
+        it — in-flight replication, other tenants' turns — stay pending)."""
+        ticket = self.submit(prompt, node_id)
+        self.cluster.network.run_until(lambda: ticket.done)
+        assert ticket.response is not None
+        return ticket.response
 
     def think(self, ms: float) -> None:
-        """Client think time between turns — lets replication land."""
+        """Client think time between turns in the *serialized* blocking
+        style — advances the shared clock, letting replication land. With
+        one client this equals waiting. With concurrent tenants use
+        :meth:`run_session`/``submit(delay_ms=...)`` instead: think becomes
+        a per-client event that defers only this client's next turn, so it
+        neither stalls other tenants' in-flight turns (they progress at
+        their own scheduled times) nor fast-forwards the cluster."""
         self.cluster.network.advance(ms)

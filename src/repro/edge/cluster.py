@@ -94,6 +94,19 @@ class EdgeCluster:
     def client_bytes_up(self) -> int:
         return self.network.bytes_for_tag(CLIENT_UP_TAG)
 
+    def run_until_quiet(self, max_ms: float = 1e9) -> float:
+        """Drive the submit/await event loop to quiescence: every in-flight
+        ticket (uplinks, consistency-read retries, queued/batched inference,
+        downlinks, chained session turns) and all replication is processed
+        in timestamp order, interleaving concurrent tenants on the shared
+        clock. Returns the final sim time."""
+        return self.network.run_until_quiet(max_ms)
+
+    def run_until(self, cond: Callable[[], bool], max_ms: float = 1e9) -> float:
+        """Drive the event loop until ``cond()`` holds (e.g. one ticket's
+        ``done``), leaving later events pending."""
+        return self.network.run_until(cond, max_ms)
+
     def converge(self) -> None:
         """Drain in-flight replication (end-of-experiment barrier)."""
         self.network.run_until_quiet()

@@ -16,11 +16,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from time import perf_counter
-from typing import Optional
+from typing import Callable, Optional
 
 from ..core.consistency import RetryPolicy
 from ..core.manager import ContextManager, LLMServiceProtocol
-from ..core.protocol import Request, Response
+from ..core.protocol import Request, Response, Ticket
 from ..store.distributed import DistributedKVStore
 from ..store.kvstore import VersionedValue
 
@@ -58,11 +58,31 @@ class EdgeNode:
             retry=retry or RetryPolicy(),
         )
         node = cls(node_id=node_id, manager=mgr, service=service)
-        if warm_start == "eager" and hasattr(service, "prime"):
+        if warm_start == "eager" and service.capabilities().prime:
             store.on_apply(node_id, node._on_replicated_context)
         return node
 
+    def submit(
+        self, req: Request, on_done: Optional[Callable[[Response], None]] = None
+    ) -> Ticket:
+        """Async serving entrypoint: start the request's prepare phase now
+        (its node-arrival time) and return a :class:`Ticket` that resolves
+        when the finish phase completes on the event clock. Many tenants'
+        tickets can be in flight at once; drive them with
+        ``EdgeCluster.run_until_quiet()``."""
+        net = self.manager.store.network
+        ticket = Ticket(request=req, submitted_at_ms=net.clock.now_ms)
+
+        def resolve(resp: Response) -> None:
+            ticket.resolve(resp, net.clock.now_ms)
+            if on_done is not None:
+                on_done(resp)
+
+        self.manager.submit(req, resolve)
+        return ticket
+
     def handle(self, req: Request) -> Response:
+        """Blocking compatibility shim (see ContextManager.handle)."""
         return self.manager.handle(req)
 
     # -- migration warm-start hook ----------------------------------------

@@ -1,15 +1,22 @@
 """LLM Service implementations (paper §3.2).
 
 The service is runtime/hardware agnostic: anything that accepts a
-pre-tokenized ``context`` parameter plus prompt tokens qualifies. Two
-implementations:
+pre-tokenized ``context`` parameter plus prompt tokens qualifies. Three
+implementations (see :class:`repro.core.manager.LLMServiceProtocol` for the
+capability-declaring interface):
 
-- :class:`EchoLLMService` — deterministic analytic-cost fake for systems
-  tests and network benchmarks (no device work, reproducible timings from a
-  calibrated cost model of prefill/decode).
+- :class:`EchoLLMService` (here) — deterministic analytic-cost fake for
+  systems tests and network benchmarks (no device work, reproducible
+  timings from a calibrated cost model of prefill/decode, plus an ``n_slots``
+  contention model so concurrent tenants queue like they would on a real
+  engine).
 - :class:`JaxLLMService` (repro.serving.engine) — the real JAX inference
-  engine running a reduced model on CPU; used by the end-to-end examples and
-  the latency benchmarks.
+  engine running a reduced model on CPU, single-stream; used by the
+  end-to-end examples and the latency benchmarks.
+- :class:`BatchedLLMService` (repro.serving.scheduler) — the continuous-
+  batching :class:`~repro.serving.scheduler.BatchedServer` mounted as a
+  node's LLM Service: concurrent sessions share its decode batch and
+  session KV pool.
 
 This mirrors the paper's llama.cpp modification: the ``/completion`` API is
 extended with a "context" parameter so the engine skips re-tokenizing stored
@@ -18,12 +25,13 @@ history and only processes the new prompt tokens.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from ..core.manager import ServiceResult
+from ..core.manager import ServiceCapabilities, ServiceResult
+from ..store.network import Network
 from ..tokenizer import ByteLevelBPE, IM_END, get_tokenizer
 
 
@@ -56,6 +64,15 @@ class EchoLLMService:
     the seed behaviour) the analytic cost still charges the full input as
     prefill and no reuse is reported, mirroring a JaxLLMService built with
     ``kv_reuse=False``.
+
+    On the submit/await path the service models **slot contention**:
+    ``n_slots`` independent inference streams, each serving one request at
+    a time. A request arriving while every stream is busy waits for the
+    earliest stream to free up; the wait is charged to
+    ``ServiceResult.queue_ms`` (→ ``Timing.queue_ms``), the analytic
+    inference cost is unchanged. The KV-prefix bookkeeping updates in
+    submit order — a deliberate simplification of the analytic twin (the
+    per-session turn counter already serializes any one session's turns).
     """
 
     model: str
@@ -68,6 +85,7 @@ class EchoLLMService:
     tokenize_scale: float = 1.0
     n_generate: int = 24
     kv_reuse: bool = False
+    n_slots: int = 1
 
     def __post_init__(self) -> None:
         self.tokenizer: ByteLevelBPE = get_tokenizer(
@@ -77,6 +95,19 @@ class EchoLLMService:
         # and how that prefix got here ("serve" | "prime")
         self._kv_prefix: Dict[str, List[int]] = {}
         self._kv_source: Dict[str, str] = {}
+        # sim-time each inference stream frees up, valid for _clock_owner's
+        # clock (a service reused across clusters restarts at idle)
+        self._slot_free_at: List[float] = [0.0] * self.n_slots
+        self._clock_owner: Optional[Network] = None
+
+    # -- capability declaration (LLMServiceProtocol) --------------------
+    def capabilities(self) -> ServiceCapabilities:
+        return ServiceCapabilities(
+            prime=self.kv_reuse,
+            kv_reuse=self.kv_reuse,
+            batched=False,
+            n_slots=self.n_slots,
+        )
 
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         """Migration warm-start (analytic twin of InferenceEngine.prime)."""
@@ -86,12 +117,41 @@ class EchoLLMService:
         self._kv_source[cache_key] = "prime"
         return True
 
+    # -- async serving entrypoint ---------------------------------------
+    def submit(
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
+        *,
+        net: Network,
+        on_done: Callable[[ServiceResult], None],
+    ) -> None:
+        """Queue the request on the earliest-free inference stream and
+        schedule its completion at ``start + inference_ms`` on the sim
+        clock; ``queue_ms`` is the slot wait."""
+        if self._clock_owner is not net:
+            self._clock_owner = net
+            self._slot_free_at = [0.0] * self.n_slots
+        result = self.completion(
+            context_ids, prompt_ids, max_new_tokens, cache_key=cache_key
+        )
+        now = net.clock.now_ms
+        slot = min(range(self.n_slots), key=self._slot_free_at.__getitem__)
+        start = max(now, self._slot_free_at[slot])
+        result.queue_ms = start - now
+        finish = start + result.inference_ms
+        self._slot_free_at[slot] = finish
+        net.schedule(finish, lambda: on_done(result))
+
+    # -- blocking/legacy entrypoint -------------------------------------
     def completion(
         self,
         context_ids: List[int],
         prompt_ids: List[int],
         max_new_tokens: int,
-        cache_key: object = None,
+        cache_key: Optional[str] = None,
     ) -> ServiceResult:
         all_ids = list(context_ids) + list(prompt_ids)
         n = len(all_ids)

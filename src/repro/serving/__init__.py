@@ -1,6 +1,6 @@
 from .engine import GenerateResult, InferenceEngine, JaxLLMService
 from .sampling import sample
-from .scheduler import BatchedServer, FinishedRequest
+from .scheduler import BatchedLLMService, BatchedServer, FinishedRequest
 from .session_cache import CacheEntry, SessionCachePool
 
 __all__ = [
@@ -9,6 +9,7 @@ __all__ = [
     "InferenceEngine",
     "JaxLLMService",
     "sample",
+    "BatchedLLMService",
     "BatchedServer",
     "FinishedRequest",
     "SessionCachePool",

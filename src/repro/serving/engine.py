@@ -36,13 +36,14 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.manager import ServiceResult
+from ..core.manager import ServiceCapabilities, ServiceResult
+from ..store.network import Network
 from ..models import (
     ModelConfig,
     decode_step,
@@ -59,6 +60,33 @@ from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
 
 def _bucket(n: int, step: int) -> int:
     return max(step, ((n + step - 1) // step) * step)
+
+
+def truncate_for_cache(
+    context_ids: List[int],
+    prompt_ids: List[int],
+    max_len: int,
+    max_new_tokens: int,
+) -> Tuple[List[int], int]:
+    """Context-overflow guard shared by every real LLM Service: keep the
+    prompt, drop the *oldest* context tokens, and reserve a modest
+    generation budget. Returns ``(input_ids, max_new)`` sized to fit a
+    ``max_len`` cache. One implementation so the single-stream and batched
+    services can never disagree on what a long session's model sees."""
+    context_ids, prompt_ids = list(context_ids), list(prompt_ids)
+    reserve = max(1, min(max_new_tokens, 16))
+    max_input = max(1, max_len - 1 - reserve)
+    total = len(context_ids) + len(prompt_ids)
+    if total > max_input:
+        drop = total - max_input
+        if drop < len(context_ids):
+            context_ids = context_ids[drop:]
+        else:
+            context_ids = []
+            prompt_ids = prompt_ids[-max_input:]
+    ids = context_ids + prompt_ids
+    budget = max(1, max_len - len(ids) - 1)
+    return ids, min(max_new_tokens, budget)
 
 
 def chunked_append(
@@ -386,6 +414,13 @@ class JaxLLMService:
     engine: InferenceEngine
     tokenizer: ByteLevelBPE
     kv_reuse: bool = True
+    # Single-stream queue model for the submit/await path: the sim time the
+    # engine frees up, valid for `_clock_owner`'s clock (a service reused
+    # across clusters/networks restarts at idle).
+    _busy_until: float = field(default=0.0, repr=False, compare=False)
+    _clock_owner: Optional[Network] = field(
+        default=None, repr=False, compare=False
+    )
 
     @classmethod
     def create(
@@ -406,6 +441,14 @@ class JaxLLMService:
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, engine=engine, tokenizer=tok, kv_reuse=kv_reuse)
 
+    def capabilities(self) -> ServiceCapabilities:
+        return ServiceCapabilities(
+            prime=self.kv_reuse,
+            kv_reuse=self.kv_reuse,
+            batched=False,
+            n_slots=1,
+        )
+
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         """Migration warm-start entry point (called by the EdgeNode
         replication-arrival hook, off the serving hot path): prefill the
@@ -415,6 +458,35 @@ class JaxLLMService:
             return False
         return self.engine.prime(cache_key, list(token_ids))
 
+    def submit(
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
+        *,
+        net: Network,
+        on_done: Callable[[ServiceResult], None],
+    ) -> None:
+        """Async serving entrypoint (single stream): the real JAX work runs
+        eagerly here — standard discrete-event practice — and its measured
+        ``inference_ms`` is laid onto the sim clock behind whatever is
+        already queued on this engine. Concurrent tenants therefore pay a
+        genuine head-of-line ``queue_ms`` while a batched service
+        (:class:`~repro.serving.scheduler.BatchedLLMService`) overlaps
+        them in one decode batch."""
+        if self._clock_owner is not net:
+            self._clock_owner = net
+            self._busy_until = 0.0
+        result = self.completion(
+            context_ids, prompt_ids, max_new_tokens, cache_key=cache_key
+        )
+        now = net.clock.now_ms
+        start = max(now, self._busy_until)
+        result.queue_ms = start - now
+        self._busy_until = start + result.inference_ms
+        net.schedule(self._busy_until, lambda: on_done(result))
+
     def completion(
         self,
         context_ids: List[int],
@@ -422,26 +494,12 @@ class JaxLLMService:
         max_new_tokens: int,
         cache_key: Optional[str] = None,
     ) -> ServiceResult:
-        context_ids = list(context_ids)
-        prompt_ids = list(prompt_ids)
-        max_len = self.engine.max_len
-        # Context-overflow guard: keep the prompt, drop the oldest context
-        # tokens, and reserve a modest generation budget.
-        reserve = max(1, min(max_new_tokens, 16))
-        max_input = max(1, max_len - 1 - reserve)
-        total = len(context_ids) + len(prompt_ids)
-        if total > max_input:
-            drop = total - max_input
-            if drop < len(context_ids):
-                context_ids = context_ids[drop:]
-            else:
-                context_ids = []
-                prompt_ids = prompt_ids[-max_input:]
-        ids = context_ids + prompt_ids
-        budget = max_len - len(ids) - 1
+        ids, max_new = truncate_for_cache(
+            context_ids, prompt_ids, self.engine.max_len, max_new_tokens
+        )
         res = self.engine.generate_ex(
             ids,
-            max_new_tokens=min(max_new_tokens, max(1, budget)),
+            max_new_tokens=max_new,
             cache_key=cache_key if self.kv_reuse else None,
         )
         gen = res.token_ids

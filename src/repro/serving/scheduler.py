@@ -18,6 +18,12 @@ under the same key. This closes the loop with the migration warm-start
 path (docs/architecture.md, "Migration warm-start"): a context primed on
 replication arrival speeds up the continuous-batching path too, not just
 the single-stream Context Manager path.
+
+:class:`BatchedLLMService` mounts the server as a node's LLM Service on the
+submit/await serving path (docs/architecture.md, "Async serving path"):
+concurrent sessions on one edge node share the decode batch and the session
+KV pool, with per-request ``queue_ms``/``batch_size`` accounting flowing
+back into :class:`~repro.core.protocol.Timing`.
 """
 
 from __future__ import annotations
@@ -25,18 +31,28 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import ModelConfig, decode_step, make_decode_caches, prefill, prefill_append
+from ..core.manager import ServiceCapabilities, ServiceResult
+from ..models import (
+    ModelConfig,
+    decode_step,
+    init_params,
+    make_decode_caches,
+    prefill,
+    prefill_append,
+    supports_append,
+)
 from ..models.cache import trim_kv_pos
-from ..tokenizer import EOS, IM_END
-from .engine import chunked_append
+from ..store.network import Network
+from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
+from .engine import _bucket, chunked_append, truncate_for_cache
 from .sampling import sample
-from .session_cache import CacheEntry, SessionCachePool
+from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
 
 
 @dataclass
@@ -50,6 +66,9 @@ class SlotState:
     cache_key: Optional[str] = None
     token_ids: List[int] = field(default_factory=list)
     reused_tokens: int = 0
+    warm_start: bool = False
+    # peak number of occupied slots observed while this request decoded
+    batch_size: int = 1
 
 
 @dataclass
@@ -61,6 +80,9 @@ class FinishedRequest:
     # session-KV reuse accounting (0 / False without a pool hit)
     cache_hit: bool = False
     reused_tokens: int = 0
+    warm_start: bool = False
+    # peak decode batch this request shared (1 = it ran alone)
+    batch_size: int = 1
 
 
 class BatchedServer:
@@ -136,7 +158,9 @@ class BatchedServer:
         entry, usable = None, 0
         if self.session_pool is not None and cache_key is not None:
             entry, usable = self.session_pool.match(cache_key, ids)
+        warm = False
         if entry is not None and usable > 0:
+            warm = entry.source == "prime"
             base = entry.caches
             if usable < entry.pos:
                 base = [
@@ -147,7 +171,9 @@ class BatchedServer:
             logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
         else:
             usable = 0
-            s = min(self.max_len, max(16, n))
+            # bucketed shape so the jitted prefill compiles once per bucket,
+            # not once per distinct prompt length (true_len masks padding)
+            s = min(self.max_len, _bucket(n, 16))
             toks = np.zeros((1, s), np.int32)
             toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
             logits, one_caches, pos = self._prefill_one(
@@ -170,6 +196,7 @@ class BatchedServer:
         self.slots[idx] = SlotState(
             request_id=rid, pos=n, max_new=max_new,
             cache_key=cache_key, token_ids=list(ids), reused_tokens=usable,
+            warm_start=warm,
         )
 
     def _append_suffix(self, caches, suffix_ids: List[int], p0: int):
@@ -219,8 +246,12 @@ class BatchedServer:
             if self.slots[idx] is None and self.queue:
                 rid, ids, max_new, cache_key = self.queue.pop(0)
                 self._insert_slot(idx, rid, ids, max_new, cache_key)
-        if not any(s is not None for s in self.slots):
+        n_active = sum(s is not None for s in self.slots)
+        if n_active == 0:
             return
+        for st in self.slots:
+            if st is not None:
+                st.batch_size = max(st.batch_size, n_active)
 
         tokens = jnp.asarray(self._next_tok)[:, None]
         logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)
@@ -248,6 +279,8 @@ class BatchedServer:
                         time.perf_counter(),
                         cache_hit=st.reused_tokens > 0,
                         reused_tokens=st.reused_tokens,
+                        warm_start=st.warm_start,
+                        batch_size=st.batch_size,
                     )
                 )
                 self.slots[idx] = None
@@ -260,3 +293,272 @@ class BatchedServer:
             self.step()
             steps += 1
         return self.finished
+
+    # -- migration warm-start -------------------------------------------
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool:
+        """Pre-warm the shared session pool with the KV state of
+        ``token_ids`` — the batched twin of
+        :meth:`repro.serving.engine.InferenceEngine.prime`, called off the
+        serving hot path when a replicated tokenized context lands on this
+        node. A later ``submit(..., cache_key=...)`` for the session then
+        admits with a suffix-only chunk prefill. Same guards as the engine:
+        skip contexts that would overflow (they get truncated on the serving
+        path and could never prefix-match), delta-extend a covering entry,
+        never evict the node's serve entries (low-priority insert)."""
+        pool = self.session_pool
+        if pool is None or not token_ids:
+            return False
+        n = len(token_ids)
+        if n >= self.max_len - 1:
+            return False
+        entry = pool.peek(cache_key)
+        if entry is None and len(pool) >= pool.capacity:
+            return False
+        usable = 0
+        if entry is not None:
+            lcp = longest_common_prefix(entry.token_ids, token_ids)
+            if lcp < entry.pos and lcp < n:
+                pool.invalidate(cache_key)  # diverged: stale/edited history
+            elif entry.pos >= n:
+                return True                 # already warm (covers everything)
+            else:
+                usable = lcp                # == entry.pos: extend the delta
+        if usable > 0:
+            _, caches, _ = self._append_suffix(
+                entry.caches, token_ids[usable:], usable
+            )
+        else:
+            s = min(self.max_len, _bucket(n, 16))
+            toks = np.zeros((1, s), np.int32)
+            toks[0, :n] = np.asarray(token_ids, np.int32) % self.cfg.vocab_size
+            _, caches, _ = self._prefill_one(
+                self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
+            )
+        n_valid = jnp.array([n], jnp.int32)
+        caches = [
+            {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n_valid)}
+            for c in caches
+        ]
+        # finish the prime inside the off-hot-path window — see
+        # InferenceEngine.prime for why the barrier matters
+        jax.block_until_ready(caches)
+        pool.put(
+            cache_key,
+            CacheEntry(token_ids=list(token_ids), caches=caches, source="prime"),
+            low_priority=True,
+        )
+        pool.primes += 1
+        return True
+
+
+@dataclass
+class _PendingBatched:
+    """Per-request bookkeeping between BatchedLLMService.submit and the
+    pump observing its FinishedRequest (all times are sim-clock ms)."""
+
+    on_done: Callable[[ServiceResult], None]
+    submitted_ms: float
+    n_input: int
+    admitted_ms: Optional[float] = None
+
+
+class BatchedLLMService:
+    """The :class:`BatchedServer` mounted as a node's LLM Service — the
+    multi-tenant serving path of the submit/await API redesign.
+
+    Satisfies :class:`~repro.core.manager.LLMServiceProtocol` with
+    ``capabilities().batched`` set: concurrent sessions on the node share
+    the server's continuous decode batch and session KV pool, so N tenants
+    cost ~one batched decode stream instead of N serialized single streams.
+
+    Sim-clock model: each :meth:`submit` enqueues into the server and
+    ensures a *pump* event chain is running. Every pump executes exactly one
+    ``server.step()`` (real JAX work, wall-measured) and lays that duration
+    onto the sim clock, so requests admitted together genuinely share each
+    step's cost. Per request, ``queue_ms`` is submit→slot-admission wait
+    and ``inference_ms`` is admission→completion (its share of the batch's
+    prefill + decode steps); ``batch_size`` reports the peak batch it rode
+    in. ``completion()`` is the blocking shim: submit, pump synchronously,
+    return — used by serialized callers and micro-benchmarks."""
+
+    def __init__(
+        self,
+        model: str,
+        server: BatchedServer,
+        tokenizer: ByteLevelBPE,
+        tokenize_scale: float = 1.0,
+    ) -> None:
+        self.model = model
+        self.server = server
+        self.tokenizer = tokenizer
+        self.tokenize_scale = tokenize_scale
+        self._pending: Dict[int, _PendingBatched] = {}
+        self._pump_scheduled = False
+        self._busy_until = 0.0
+        self._seen_finished = 0
+        self._clock_owner: Optional[Network] = None
+
+    @classmethod
+    def create(
+        cls,
+        model: str,
+        cfg: ModelConfig,
+        *,
+        seed: int = 0,
+        tokenizer_seed: int = 0,
+        n_slots: int = 4,
+        max_len: int = 512,
+        session_cache_capacity: int = 8,
+    ) -> "BatchedLLMService":
+        params = init_params(jax.random.key(seed), cfg)
+        pool = (
+            SessionCachePool(capacity=session_cache_capacity)
+            if session_cache_capacity > 0 and supports_append(cfg)
+            else None
+        )
+        server = BatchedServer(
+            cfg, params, n_slots=n_slots, max_len=max_len, session_pool=pool
+        )
+        tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
+        return cls(model=model, server=server, tokenizer=tok)
+
+    # -- LLMServiceProtocol ---------------------------------------------
+    def capabilities(self) -> ServiceCapabilities:
+        return ServiceCapabilities(
+            prime=self.server.session_pool is not None,
+            kv_reuse=self.server.session_pool is not None,
+            batched=True,
+            n_slots=self.server.n_slots,
+        )
+
+    def prime(self, cache_key: str, token_ids: List[int]) -> bool:
+        return self.server.prime(cache_key, list(token_ids))
+
+    def submit(
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
+        *,
+        net: Network,
+        on_done: Callable[[ServiceResult], None],
+    ) -> None:
+        if self._clock_owner is not net:
+            assert not self._pending, "batched service is bound to a live cluster"
+            self._clock_owner = net
+            self._busy_until = 0.0
+            self._pump_scheduled = False
+        ids, max_new = truncate_for_cache(
+            context_ids, prompt_ids, self.server.max_len, max_new_tokens
+        )
+        rid = self.server.submit(ids, max_new=max_new, cache_key=cache_key)
+        self._pending[rid] = _PendingBatched(
+            on_done=on_done, submitted_ms=net.clock.now_ms, n_input=len(ids)
+        )
+        self._ensure_pump(net)
+
+    def completion(
+        self,
+        context_ids: List[int],
+        prompt_ids: List[int],
+        max_new_tokens: int,
+        cache_key: Optional[str] = None,
+    ) -> ServiceResult:
+        """Blocking shim: run the request (and anything already queued)
+        to completion on the server, contention-free accounting."""
+        assert not self._pending, (
+            "blocking completion() cannot interleave with in-flight "
+            "submit() requests — drive the event loop instead"
+        )
+        ids, max_new = truncate_for_cache(
+            context_ids, prompt_ids, self.server.max_len, max_new_tokens
+        )
+        t0 = time.perf_counter()
+        rid = self.server.submit(ids, max_new=max_new, cache_key=cache_key)
+        done: Dict[int, FinishedRequest] = {}
+        while rid not in done:
+            self.server.step()
+            for f in self.server.finished[self._seen_finished:]:
+                done[f.request_id] = f
+            self._seen_finished = len(self.server.finished)
+        self._drain_consumed()
+        f = done[rid]
+        return self._result_from(
+            f, n_input=len(ids), inference_ms=(time.perf_counter() - t0) * 1e3,
+            queue_ms=0.0,
+        )
+
+    def _drain_consumed(self) -> None:
+        """Drop finished entries the service has already turned into
+        results — a node-mounted server lives for the node's lifetime, and
+        ``server.finished`` must not grow one entry per request forever.
+        (Direct ``BatchedServer.run_to_completion`` users keep their
+        accumulated list; only the mounted service drains.)"""
+        if self._seen_finished == len(self.server.finished):
+            self.server.finished.clear()
+            self._seen_finished = 0
+
+    # -- the pump event chain -------------------------------------------
+    def _ensure_pump(self, net: Network) -> None:
+        if self._pump_scheduled:
+            return
+        self._pump_scheduled = True
+        net.schedule(
+            max(net.clock.now_ms, self._busy_until), lambda: self._pump(net)
+        )
+
+    def _pump(self, net: Network) -> None:
+        """One scheduler tick on the sim clock: admissions are recorded at
+        the tick's start, the step's wall time becomes the tick's duration,
+        and completions resolve at its end."""
+        self._pump_scheduled = False
+        if not self.server.busy:
+            return
+        t = net.clock.now_ms
+        queued_before = {q[0] for q in self.server.queue}
+        w0 = time.perf_counter()
+        self.server.step()
+        dt = (time.perf_counter() - w0) * 1e3
+        end = t + dt
+        self._busy_until = end
+        for rid in queued_before - {q[0] for q in self.server.queue}:
+            if rid in self._pending:
+                self._pending[rid].admitted_ms = t
+        for f in self.server.finished[self._seen_finished:]:
+            p = self._pending.pop(f.request_id, None)
+            if p is None:
+                continue  # submitted via the blocking shim
+            admitted = p.admitted_ms if p.admitted_ms is not None else t
+            result = self._result_from(
+                f, n_input=p.n_input,
+                inference_ms=end - admitted,
+                queue_ms=admitted - p.submitted_ms,
+            )
+            net.schedule(end, lambda r=result, cb=p.on_done: cb(r))
+        self._seen_finished = len(self.server.finished)
+        self._drain_consumed()
+        if self.server.busy:
+            self._pump_scheduled = True
+            net.schedule(end, lambda: self._pump(net))
+
+    def _result_from(
+        self,
+        f: FinishedRequest,
+        n_input: int,
+        inference_ms: float,
+        queue_ms: float,
+    ) -> ServiceResult:
+        stop = self.server.stop_tokens
+        text = self.tokenizer.decode([t for t in f.token_ids if t not in stop])
+        return ServiceResult(
+            text=text,
+            token_ids=list(f.token_ids),
+            inference_ms=inference_ms,
+            cache_hit=f.cache_hit,
+            reused_tokens=f.reused_tokens,
+            prefill_tokens=n_input - f.reused_tokens,
+            warm_start=f.warm_start,
+            queue_ms=queue_ms,
+            batch_size=f.batch_size,
+        )

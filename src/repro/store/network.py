@@ -138,6 +138,20 @@ class Network:
             fn()
         return self.clock.now_ms
 
+    def run_until(self, cond: Callable[[], bool], max_ms: float = 1e9) -> float:
+        """Process events in arrival order until ``cond()`` holds (e.g. a
+        Ticket resolving). Unlike :meth:`run_until_quiet`, events past the
+        condition stay pending — the blocking-API shims use this so a
+        serialized ``chat()`` stops the clock at response receipt instead of
+        fast-forwarding through every in-flight replication."""
+        while not cond():
+            if not self._events or self._events[0][0] > max_ms:
+                break
+            t, _, fn = heapq.heappop(self._events)
+            self.clock.advance_to(t)
+            fn()
+        return self.clock.now_ms
+
     @property
     def pending_events(self) -> int:
         return len(self._events)

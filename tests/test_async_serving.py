@@ -1,0 +1,349 @@
+"""Submit/await serving API: concurrent multi-tenant lifecycle tests.
+
+Covers the event-driven redesign (docs/architecture.md, "Async serving
+path"): Ticket resolution, per-client think events, LLM Service queueing
+(slot contention), mixed consistency policies interleaved on one keygroup,
+the chat()/handle() compatibility shims, and the BatchedServer mounted as a
+node's LLM Service sharing its decode batch across concurrent sessions.
+"""
+
+import typing
+
+import pytest
+
+from repro.core import (
+    ConsistencyPolicy,
+    ContextMode,
+    RetryPolicy,
+    ServiceCapabilities,
+)
+from repro.edge import EchoLLMService, EdgeCluster, LLMClient
+from repro.store import Link
+
+
+def build_echo(n_nodes=2, n_slots=1, latency=3.0, kv_reuse=False, retry=None):
+    return EdgeCluster.build(
+        [f"n{i}" for i in range(n_nodes)],
+        lambda nid: EchoLLMService(
+            model="m", vocab_size=32000, n_slots=n_slots, kv_reuse=kv_reuse
+        ),
+        inter_node_link=Link(latency_ms=latency, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=1.0, bandwidth_mbps=1000.0),
+        retry=retry,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ticket + shim equivalence
+# ---------------------------------------------------------------------------
+
+def _comparable(resp):
+    """Response fields that are deterministic under the sim clock (wall-
+    measured tokenize/async-update jitter excluded)."""
+    return (
+        resp.text, resp.turn, resp.served_by, resp.stale, resp.error,
+        resp.n_prompt_tokens, resp.n_context_tokens, resp.n_generated_tokens,
+        resp.timing.retries, resp.timing.context_read_ms,
+        resp.timing.inference_ms, resp.timing.queue_ms,
+        resp.timing.batch_size, resp.timing.network_up_ms,
+        resp.timing.network_down_ms, resp.timing.kv_cache_hit,
+        resp.timing.kv_reused_tokens,
+    )
+
+
+def test_chat_shim_equals_submit_await_serialized():
+    """The blocking chat() path must produce identical Responses to an
+    explicit submit + run_until drive of the same serialized workload."""
+    turns = [("about lidar", "n0"), ("more on that", "n0"),
+             ("now roam", "n1"), ("and back", "n0")]
+
+    shim = build_echo()
+    c1 = LLMClient(shim, model="m")
+    via_chat = []
+    for prompt, node in turns:
+        via_chat.append(c1.chat(prompt, node))
+        c1.think(300)
+
+    awaited = build_echo()
+    c2 = LLMClient(awaited, model="m")
+    via_submit = []
+    for prompt, node in turns:
+        ticket = c2.submit(prompt, node)
+        awaited.run_until(lambda: ticket.done)
+        assert ticket.done and ticket.response is not None
+        assert ticket.latency_ms > 0
+        via_submit.append(ticket.response)
+        c2.think(300)
+
+    assert [_comparable(r) for r in via_chat] == [_comparable(r) for r in via_submit]
+
+
+def test_ticket_on_done_fires_after_resolution():
+    cluster = build_echo(n_nodes=1)
+    client = LLMClient(cluster, model="m")
+    seen = []
+    ticket = client.submit("hello", "n0")
+    ticket.on_done(lambda t: seen.append(t.response.text))
+    assert not ticket.done and seen == []
+    cluster.run_until_quiet()
+    assert ticket.done and seen == [ticket.response.text]
+    # late registration fires immediately
+    ticket.on_done(lambda t: seen.append("late"))
+    assert seen[-1] == "late"
+
+
+def test_deferred_submit_builds_request_at_send_time():
+    """A delayed turn (per-client think) must carry the session state left
+    by the previous turn — the Request is built when the send fires."""
+    cluster = build_echo(n_nodes=1)
+    client = LLMClient(cluster, model="m")
+    first = client.submit("seed turn", "n0")
+    second = client.submit("follow-up", "n0", delay_ms=5000.0)
+    assert second.request is None          # not sent yet
+    cluster.run_until_quiet()
+    assert first.response.turn == 1
+    assert second.request is not None
+    assert second.request.turn == 1        # saw turn 1 complete first
+    assert second.response.turn == 2
+    assert second.request.session_id == first.response.session_id
+
+
+# ---------------------------------------------------------------------------
+# Queueing / slot contention
+# ---------------------------------------------------------------------------
+
+def test_concurrent_clients_queue_on_single_stream():
+    """One node, one inference stream: three tenants submitting together
+    serialize inside the service, and the wait lands in Timing.queue_ms."""
+    cluster = build_echo(n_nodes=1, n_slots=1)
+    clients = [LLMClient(cluster, model="m") for _ in range(3)]
+    tickets = [c.submit(f"question {i}", "n0") for i, c in enumerate(clients)]
+    cluster.run_until_quiet()
+
+    resps = [t.response for t in tickets]
+    assert all(r.error is None for r in resps)
+    queues = sorted(r.timing.queue_ms for r in resps)
+    inference = resps[0].timing.inference_ms
+    assert queues[0] < 1.0                       # someone ran immediately
+    assert queues[1] == pytest.approx(inference, rel=0.05)
+    assert queues[2] == pytest.approx(2 * inference, rel=0.05)
+    # queueing delay is client-observable
+    assert all(
+        r.timing.response_time_ms >= r.timing.queue_ms for r in resps
+    )
+
+
+def test_parallel_slots_remove_queueing():
+    cluster = build_echo(n_nodes=1, n_slots=4)
+    clients = [LLMClient(cluster, model="m") for _ in range(4)]
+    tickets = [c.submit(f"question {i}", "n0") for i, c in enumerate(clients)]
+    end = cluster.run_until_quiet()
+    resps = [t.response for t in tickets]
+    assert all(r.error is None for r in resps)
+    assert all(r.timing.queue_ms == 0.0 for r in resps)
+    # makespan ~ one inference, not four
+    assert end < 2 * resps[0].timing.inference_ms
+
+
+def test_think_time_is_per_client():
+    """One tenant's think time must not stall or fast-forward another's
+    in-flight turns: a thinking client and a rapid-fire client interleave
+    on the shared clock, each at its own pace."""
+    cluster = build_echo(n_nodes=2, n_slots=1)
+    slow = LLMClient(cluster, model="m")
+    fast = LLMClient(cluster, model="m")
+    s_trace = slow.run_session([("s0", "n0"), ("s1", "n0"), ("s2", "n0")],
+                               think_ms=2000.0)
+    f_trace = fast.run_session([("f0", "n1"), ("f1", "n1"), ("f2", "n1")],
+                               think_ms=0.0)
+    cluster.run_until_quiet()
+    assert s_trace.done and f_trace.done
+    assert len(s_trace.responses) == len(f_trace.responses) == 3
+    # the fast client finished all three turns long before the slow one
+    assert (f_trace.tickets[-1].completed_at_ms
+            < s_trace.tickets[-1].completed_at_ms - 2000.0)
+    # think time separates the slow client's turns by >= think_ms
+    for prev, nxt in zip(s_trace.tickets, s_trace.tickets[1:]):
+        assert nxt.submitted_at_ms == pytest.approx(
+            prev.completed_at_ms + 2000.0
+        )
+
+
+# ---------------------------------------------------------------------------
+# Mixed consistency policies under concurrency (same keygroup)
+# ---------------------------------------------------------------------------
+
+def test_mixed_policies_interleaved_on_one_keygroup():
+    """A STRONG tenant that fails stale and an AVAILABLE tenant that serves
+    stale, roaming concurrently through the same keygroup: replication can
+    never land (huge inter-node latency), so the roamed-to replica is
+    behind both clients' turn counters."""
+    retry = RetryPolicy(max_retries=2, backoff_ms=5.0)
+    cluster = build_echo(n_nodes=2, latency=1e6, retry=retry)
+    strong = LLMClient(cluster, model="m", policy=ConsistencyPolicy.STRONG)
+    avail = LLMClient(cluster, model="m", policy=ConsistencyPolicy.AVAILABLE)
+
+    s_trace = strong.run_session([("s seed", "n0"), ("s roam", "n1")],
+                                 think_ms=50.0)
+    a_trace = avail.run_session([("a seed", "n0"), ("a roam", "n1")],
+                                think_ms=50.0)
+    cluster.run_until_quiet()
+
+    # STRONG: seed turn fine, roamed turn fails with the protocol error
+    assert s_trace.done
+    assert s_trace.responses[0].error is None
+    s_fail = s_trace.responses[1]
+    assert s_fail.error is not None and "turn" in s_fail.error
+    assert s_fail.timing.retries == retry.max_retries
+    assert strong.turn == 1                     # counter not bumped by error
+
+    # AVAILABLE: same staleness, served anyway and flagged
+    assert a_trace.done and len(a_trace.responses) == 2
+    a_roam = a_trace.responses[1]
+    assert a_roam.error is None and a_roam.stale
+    assert a_roam.turn == 2
+    # both tenants interleaved through the same keygroup replica set
+    assert {r.served_by for r in s_trace.responses + a_trace.responses} == {
+        "n0", "n1"
+    }
+
+
+# ---------------------------------------------------------------------------
+# Capability declaration (no hasattr duck-typing)
+# ---------------------------------------------------------------------------
+
+def test_echo_capabilities_follow_kv_reuse():
+    off = EchoLLMService(model="m", vocab_size=1000)
+    on = EchoLLMService(model="m", vocab_size=1000, kv_reuse=True, n_slots=3)
+    assert off.capabilities() == ServiceCapabilities(
+        prime=False, kv_reuse=False, batched=False, n_slots=1
+    )
+    assert on.capabilities() == ServiceCapabilities(
+        prime=True, kv_reuse=True, batched=False, n_slots=3
+    )
+
+
+def test_completion_signature_matches_protocol():
+    """Satellite: EchoLLMService.completion's cache_key is Optional[str],
+    matching LLMServiceProtocol (was `object`)."""
+    hints = typing.get_type_hints(EchoLLMService.completion)
+    assert hints["cache_key"] == typing.Optional[str]
+
+
+def test_warm_start_hook_gated_on_capability():
+    """EdgeNode.create must consult capabilities().prime, not hasattr:
+    every service has a prime() method now, but only capable ones may be
+    subscribed to replication arrivals."""
+    plain = build_echo(n_nodes=2, kv_reuse=False)
+    assert not plain.store._apply_hooks
+    capable = build_echo(n_nodes=2, kv_reuse=True)
+    assert set(capable.store._apply_hooks) == {"n0", "n1"}
+
+
+# ---------------------------------------------------------------------------
+# BatchedServer mounted as a node's LLM Service
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.models import ModelConfig
+
+    return ModelConfig(
+        name="tiny-batched", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=4096,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def test_batched_service_shares_decode_batch(tiny_cfg):
+    """Concurrent tenants on one node ride the same continuous decode
+    batch (Timing.batch_size > 1) and their outputs match the single-stream
+    engine run of the same model (slots are isolated, greedy decode)."""
+    from repro.serving import BatchedLLMService, JaxLLMService
+
+    batched = BatchedLLMService.create(
+        "tiny-batched", tiny_cfg, n_slots=4, max_len=192
+    )
+    assert batched.capabilities().batched and batched.capabilities().prime
+    cluster = EdgeCluster.build(["a"], lambda nid: batched)
+    clients = [
+        LLMClient(cluster, model="tiny-batched", max_new_tokens=6)
+        for _ in range(4)
+    ]
+    tickets = [
+        c.submit(f"question {i} about robots", "a")
+        for i, c in enumerate(clients)
+    ]
+    cluster.run_until_quiet()
+    resps = [t.response for t in tickets]
+    assert all(r.error is None for r in resps)
+    assert all(1 <= r.n_generated_tokens <= 6 for r in resps)
+    assert max(r.timing.batch_size for r in resps) > 1
+    assert all(r.timing.inference_ms > 0 for r in resps)
+
+    # single-stream reference: same params seed, same greedy decode
+    single = JaxLLMService.create(
+        "tiny-batched", tiny_cfg, max_len=192, kv_reuse=False
+    )
+    ref_cluster = EdgeCluster.build(["a"], lambda nid: single)
+    for i, r in enumerate(resps):
+        ref = LLMClient(ref_cluster, model="tiny-batched", max_new_tokens=6)
+        assert ref.chat(f"question {i} about robots", "a").text == r.text
+
+
+def test_batched_service_session_kv_reuse_second_turn(tiny_cfg):
+    """Turn 2 of each concurrent session prefix-matches the KV state its
+    turn 1 wrote back to the shared pool: suffix-only prefill."""
+    from repro.serving import BatchedLLMService
+
+    service = BatchedLLMService.create(
+        "tiny-batched", tiny_cfg, n_slots=2, max_len=192,
+        session_cache_capacity=4,
+    )
+    cluster = EdgeCluster.build(["a"], lambda nid: service)
+    clients = [
+        LLMClient(cluster, model="tiny-batched", max_new_tokens=4)
+        for _ in range(2)
+    ]
+    traces = [
+        c.run_session([(f"first q {i}", "a"), (f"second q {i}", "a")],
+                      think_ms=100.0)
+        for i, c in enumerate(clients)
+    ]
+    cluster.run_until_quiet()
+    for trace in traces:
+        assert trace.done and len(trace.responses) == 2
+        first, second = trace.responses
+        assert not first.timing.kv_cache_hit
+        assert second.timing.kv_cache_hit
+        assert second.timing.kv_reused_tokens > 0
+        assert second.timing.prefill_tokens < second.n_prompt_tokens + \
+            second.n_context_tokens
+
+
+def test_batched_service_prime_warm_start(tiny_cfg):
+    """BatchedServer.prime pre-warms the pool so a roaming session's first
+    batched turn reuses the replicated context's KV (kv_warm_start)."""
+    from repro.serving import BatchedLLMService
+
+    services = {
+        nid: BatchedLLMService.create(
+            "tiny-batched", tiny_cfg, n_slots=2, max_len=192, seed=0
+        )
+        for nid in ("a", "b")
+    }
+    cluster = EdgeCluster.build(
+        ["a", "b"], lambda nid: services[nid],
+        inter_node_link=Link(latency_ms=2.0, bandwidth_mbps=100.0),
+    )
+    client = LLMClient(cluster, model="tiny-batched", max_new_tokens=4)
+    trace = client.run_session(
+        [("seed the context", "a"), ("now roam away", "b")], think_ms=500.0
+    )
+    cluster.run_until_quiet()
+    assert trace.done and all(r.error is None for r in trace.responses)
+    roam = trace.responses[1]
+    assert roam.served_by == "b"
+    assert roam.timing.migrated
+    assert roam.timing.kv_cache_hit and roam.timing.kv_warm_start
+    assert cluster.warm_starts() >= 1
