@@ -1,0 +1,241 @@
+"""Paged vs full-width session KV under a fixed memory budget.
+
+Sweeps 4/16/32 concurrent tenants against two :class:`~repro.serving.
+BatchedServer` configurations holding the SAME worst-case KV byte budget
+(``(n_slots + pool_capacity) * max_len`` token-slots):
+
+- ``full_width`` — every decode lane and every SessionCachePool entry is a
+  ``max_len``-wide cache; the pool is entry-counted (capacity
+  ``pool_capacity``), so at 16+ tenants most sessions lose their KV between
+  turns and re-prefill from scratch.
+- ``paged``      — the :class:`~repro.serving.PagedKVAllocator` backs lanes
+  and pool entries with fixed-size pages sized to actual token counts; the
+  pool is page-budgeted, so the same bytes keep several times more
+  sessions' KV resident (docs/architecture.md, "Paged session KV").
+
+Each tenant runs 2 turns with its session ``cache_key``. Reported per
+(mode, tenants): turn-2 wave tokens/s (wall), turn-2 pool hit count,
+sessions resident after the wave, and resident KV bytes vs the budget.
+Outputs are asserted token-identical between modes — paging is never a
+correctness tradeoff.
+
+Acceptance (BENCH_paged_kv.json): at 16 and 32 tenants the paged server
+keeps ≥2x the sessions of the full-width server resident in the same
+budget (≥2x turn-2 KV hits), with resident bytes within budget.
+
+    PYTHONPATH=src python -m benchmarks.paged_kv_bench          # full sweep
+    PYTHONPATH=src python -m benchmarks.paged_kv_bench --smoke  # tiny, CI
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+TENANTS = (4, 16, 32)
+N_SLOTS = 4
+MAX_LEN = 256
+PAGE_SIZE = 16
+POOL_CAP = 4          # full-width pool entries within the budget
+MAX_NEW = 8
+
+
+def _cfg():
+    from repro.models import ModelConfig
+
+    return ModelConfig(
+        name="bench-paged", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=4096,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+def _servers(cfg, params):
+    from repro.serving import BatchedServer, SessionCachePool
+
+    full = BatchedServer(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session_pool=SessionCachePool(capacity=POOL_CAP),
+    )
+    budget_pages = (N_SLOTS + POOL_CAP) * (MAX_LEN // PAGE_SIZE)
+    paged = BatchedServer(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session_pool=SessionCachePool(capacity=4 * max(TENANTS)),
+        paged=True, page_size=PAGE_SIZE, kv_pages=1 + budget_pages,
+    )
+    return full, paged
+
+
+def _wave(server, requests):
+    """Submit a wave of (ids, key) requests, run to completion, return
+    ({key: FinishedRequest}, wall_seconds)."""
+    t0 = time.perf_counter()
+    rids = {
+        server.submit(ids, max_new=MAX_NEW, cache_key=key): key
+        for ids, key in requests
+    }
+    fin = {rids[f.request_id]: f for f in server.run_to_completion()
+           if f.request_id in rids}
+    wall = time.perf_counter() - t0
+    server.finished.clear()
+    return fin, wall
+
+
+def _sweep(cfg, params, tok, emit):
+    full, paged = _servers(cfg, params)
+    budget_bytes = paged.allocator.total_kv_bytes
+    results = {}
+
+    # warmup: compile the prefill buckets, the keyed append/gather/scatter
+    # admission path, and the decode shapes
+    for srv in (full, paged):
+        warm = [(tok.encode("warmup request " * k), f"w{k}") for k in (1, 4, 8)]
+        fin, _ = _wave(srv, warm)
+        _wave(srv, [(ids + fin[key].token_ids + tok.encode("more"), key)
+                    for ids, key in warm])
+
+    for n_tenants in TENANTS:
+        full.session_pool.clear()
+        paged.session_pool.clear()
+        # ~30 tokens of actual context per tenant (2 pages): tenant KV is
+        # sized by what sessions really hold, so the paged pool keeps all
+        # 32 resident where the entry-counted full-width pool keeps 4
+        ctxs = {
+            i: tok.encode(f"tenant {i} background: telemetry history entry")
+            for i in range(n_tenants)
+        }
+        keys = {i: f"T{n_tenants}-s{i}" for i in range(n_tenants)}
+
+        turn1 = [(ctxs[i], keys[i]) for i in range(n_tenants)]
+        fin_full1, _ = _wave(full, turn1)
+        fin_paged1, _ = _wave(paged, turn1)
+        hist = {}
+        for i in range(n_tenants):
+            assert fin_full1[keys[i]].token_ids == fin_paged1[keys[i]].token_ids
+            hist[i] = ctxs[i] + fin_full1[keys[i]].token_ids
+
+        turn2 = [
+            (hist[i] + tok.encode(f"follow-up question {i}"), keys[i])
+            for i in range(n_tenants)
+        ]
+        fin_full2, wall_full = _wave(full, turn2)
+        fin_paged2, wall_paged = _wave(paged, turn2)
+        row = {}
+        for name, fin, wall, srv in (
+            ("full_width", fin_full2, wall_full, full),
+            ("paged", fin_paged2, wall_paged, paged),
+        ):
+            toks = sum(len(f.token_ids) for f in fin.values())
+            hits = sum(f.cache_hit for f in fin.values())
+            row[name] = {
+                "turn2_hits": int(hits),
+                "turn2_tokens_per_s": toks / wall,
+                "sessions_resident": len(srv.session_pool),
+                "resident_kv_bytes": int(srv.resident_kv_bytes()),
+                "total_kv_bytes": int(srv.total_kv_bytes()),
+            }
+        for i in range(n_tenants):
+            assert fin_full2[keys[i]].token_ids == fin_paged2[keys[i]].token_ids
+        results[str(n_tenants)] = row
+        emit(
+            f"paged_kv_t{n_tenants}_tokens_per_s",
+            row["paged"]["turn2_tokens_per_s"],
+            f"hits={row['paged']['turn2_hits']}/{n_tenants};"
+            f"full_hits={row['full_width']['turn2_hits']};"
+            f"resident_MB={row['paged']['resident_kv_bytes'] / 1e6:.2f}",
+        )
+    return results, budget_bytes
+
+
+def paged_kv_bench(emit) -> None:
+    import jax
+
+    from repro.models import init_params
+    from repro.tokenizer import get_tokenizer
+
+    cfg = _cfg()
+    params = init_params(jax.random.key(0), cfg)
+    tok = get_tokenizer(cfg.vocab_size, seed=0, name=cfg.name)
+    results, budget_bytes = _sweep(cfg, params, tok, emit)
+
+    acceptance = {}
+    for t in ("16", "32"):
+        p, f = results[t]["paged"], results[t]["full_width"]
+        assert p["turn2_hits"] >= 2 * max(1, f["turn2_hits"]), (t, p, f)
+        assert p["sessions_resident"] >= 2 * f["sessions_resident"], (t, p, f)
+        assert p["resident_kv_bytes"] <= budget_bytes
+        acceptance[t] = {
+            "paged_turn2_hits": p["turn2_hits"],
+            "full_width_turn2_hits": f["turn2_hits"],
+            "paged_sessions_resident": p["sessions_resident"],
+            "full_width_sessions_resident": f["sessions_resident"],
+            "hits_ratio": p["turn2_hits"] / max(1, f["turn2_hits"]),
+        }
+    out = {
+        "model": cfg.name,
+        "tenants": list(TENANTS),
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "page_size": PAGE_SIZE,
+        "full_width_pool_capacity": POOL_CAP,
+        "kv_budget_bytes": int(budget_bytes),
+        "max_new_tokens": MAX_NEW,
+        **results,
+        "acceptance": acceptance,
+    }
+    path = Path(__file__).resolve().parents[1] / "BENCH_paged_kv.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def smoke() -> None:
+    """CI fast-gate smoke: a tiny paged server serves 4 two-turn tenants
+    with every second turn a pool hit, zero-copy write-back accounted."""
+    import jax
+
+    from repro.models import init_params
+    from repro.serving import BatchedServer, SessionCachePool
+    from repro.tokenizer import get_tokenizer
+
+    cfg = _cfg()
+    params = init_params(jax.random.key(0), cfg)
+    tok = get_tokenizer(cfg.vocab_size, seed=0, name=cfg.name)
+    srv = BatchedServer(
+        cfg, params, n_slots=2, max_len=64,
+        session_pool=SessionCachePool(capacity=8),
+        paged=True, page_size=16,
+    )
+    fin1, _ = _wave(srv, [(tok.encode(f"tenant {i} ctx"), f"s{i}")
+                          for i in range(4)])
+    fin2, _ = _wave(srv, [
+        (tok.encode(f"tenant {i} ctx") + fin1[f"s{i}"].token_ids
+         + tok.encode("next"), f"s{i}")
+        for i in range(4)
+    ])
+    assert all(f.cache_hit for f in fin2.values())
+    alloc = srv.allocator
+    assert alloc.used_pages == srv.session_pool.pages_in_use
+    assert alloc.used_pages + alloc.n_free == alloc.n_pages - 1
+    print("paged KV smoke OK:", json.dumps({
+        "sessions": len(srv.session_pool),
+        "used_pages": alloc.used_pages,
+        "resident_kv_bytes": alloc.resident_kv_bytes,
+    }))
+
+
+def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    paged_kv_bench(emit)
+
+
+if __name__ == "__main__":
+    main()

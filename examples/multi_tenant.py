@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--paged", action="store_true",
+                    help="page-table KV (block-granular shared pool) instead "
+                         "of full-width per-slot caches")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -33,7 +36,8 @@ def main() -> None:
     )
     params = init_params(jax.random.key(0), cfg)
     tok = get_tokenizer(cfg.vocab_size, seed=0)
-    srv = BatchedServer(cfg, params, n_slots=args.slots, max_len=256)
+    srv = BatchedServer(cfg, params, n_slots=args.slots, max_len=256,
+                        paged=args.paged)
 
     prompts = [
         f"user {i} asks about {topic}"
@@ -57,6 +61,10 @@ def main() -> None:
               f"latency {lat:7.1f}ms")
     total_tokens = sum(len(f.token_ids) for f in fin)
     print(f"aggregate throughput: {total_tokens / wall:.1f} tok/s")
+    mode = "paged" if args.paged else "full-width"
+    print(f"resident KV between requests ({mode}): "
+          f"{srv.resident_kv_bytes() / 1e6:.2f} MB "
+          f"of {srv.total_kv_bytes() / 1e6:.2f} MB budget")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,10 @@ python -m pytest -q -m "not slow"
 echo "== smoke: concurrent multi-client submit/await (echo, no device work) =="
 python -m benchmarks.concurrency_bench --smoke
 
-echo "== smoke: examples/quickstart.py (full stack, asserts warm-start roam) =="
+echo "== smoke: paged session KV (tiny batched server, 4 tenants) =="
+python -m benchmarks.paged_kv_bench --smoke
+
+echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 
 echo "== docs freshness: tier-1 command present in README.md + docs/ =="

@@ -110,10 +110,24 @@ class EchoLLMService:
         )
 
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
-        """Migration warm-start (analytic twin of InferenceEngine.prime)."""
+        """Migration warm-start (analytic twin of InferenceEngine.prime).
+        Extending a prefix the node already holds keeps its provenance: a
+        "serve" prefix delta-extended by a replicated write is still the
+        node's own hot session, and relabeling it "prime" would miscount
+        the next local hit as a migration warm start."""
         if not self.kv_reuse or not token_ids:
             return False
-        self._kv_prefix[cache_key] = list(token_ids)
+        ids = list(token_ids)
+        prev = self._kv_prefix.get(cache_key)
+        if prev is not None:
+            lcp = _lcp(prev, ids)
+            if lcp == len(ids) and len(prev) >= len(ids):
+                return True  # prefix already covered (stale re-delivery): no-op
+            if lcp == len(prev):
+                self._kv_prefix[cache_key] = ids  # delta-extend, keep source
+                return True
+        # fresh install (or divergence: stale/edited history replaces it)
+        self._kv_prefix[cache_key] = ids
         self._kv_source[cache_key] = "prime"
         return True
 

@@ -2,6 +2,7 @@ from .config import ModelConfig
 from .transformer import (
     abstract_params,
     decode_step,
+    decode_step_paged,
     forward_full,
     init_params,
     layer_groups,
@@ -13,6 +14,7 @@ __all__ = [
     "ModelConfig",
     "abstract_params",
     "decode_step",
+    "decode_step_paged",
     "forward_full",
     "init_params",
     "layer_groups",

@@ -161,6 +161,32 @@ def attention_decode(
     return out @ p["wo"]
 
 
+def attention_decode_paged(
+    p: Params,
+    x: jnp.ndarray,              # (B,1,D) — the single new token
+    positions: jnp.ndarray,      # (B,1) or (3,B,1)
+    pool_k: jnp.ndarray,         # (P, ps, KV, Dh) — shared page pool, one layer
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,     # (B, MP) physical page ids per lane
+    kv_pos: jnp.ndarray,         # (B, MP*ps) absolute positions per virtual slot
+    cfg: ModelConfig,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Page-table-aware decode: gather each lane's pages into the linear
+    full-cache view (slot == absolute position) and run the standard
+    position-masked decode attention. The gathered view is transient — the
+    resident state between steps is the shared pool plus the tiny tables —
+    and is bit-identical to the full-width cache layout, so greedy decode
+    matches the unpaged path exactly."""
+    from .cache import gather_pages
+
+    ck = gather_pages(pool_k, page_table)
+    cv = gather_pages(pool_v, page_table)
+    return attention_decode(
+        p, x, positions, ck, cv, kv_pos, kv_pos >= 0, cfg, window=window
+    )
+
+
 def attention_append(
     p: Params,
     x: jnp.ndarray,              # (B,S,D) — a chunk of new tokens

@@ -102,6 +102,83 @@ def trim_kv_pos(kv_pos: jnp.ndarray, n_valid) -> jnp.ndarray:
     return jnp.where(keep, kv_pos, -1)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV (serving): block-granular storage behind a page table
+# ---------------------------------------------------------------------------
+#
+# A paged pool replaces the per-sequence full-width (B, T, KV, Dh) cache with
+# a shared physical pool of fixed-size pages, (P, page_size, KV, Dh) per
+# layer. A sequence is a *page table* — a list of physical page ids — whose
+# concatenation reproduces the linear slot == absolute-position layout of the
+# full cache exactly, so the position-masked attention rule is unchanged:
+# gather the pages into a linear view, attend, and scatter the new token's
+# K/V into its (page, offset) cell. Page id 0 is reserved as a scratch page:
+# table padding points at it, and writes landing there (inactive batch
+# lanes, scatter padding) are garbage by design, masked via kv_pos.
+
+
+def init_paged_pool(
+    cfg: ModelConfig, n_layers: int, n_pages: int, page_size: int, dtype=None
+) -> Cache:
+    """Physical KV page pool for one layer group: k/v of shape
+    (L, n_pages, page_size, KV, Dh). kv_pos is tracked per *sequence*
+    (B, width) by the owner, not per page."""
+    dt = dtype or dtype_of(cfg.compute_dtype)
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((n_layers, n_pages, page_size, kv, dh), dtype=dt),
+        "v": jnp.zeros((n_layers, n_pages, page_size, kv, dh), dtype=dt),
+    }
+
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Linearize a per-layer pool slice through a page table.
+
+    pool: (P, page_size, KV, Dh); page_table: (B, MP) physical page ids.
+    Returns (B, MP*page_size, KV, Dh) — the virtual full-width cache view
+    whose slot t holds page_table[t // ps], offset t % ps."""
+    b, mp = page_table.shape
+    ps = pool.shape[1]
+    out = pool[page_table]                      # (B, MP, ps, KV, Dh)
+    return out.reshape(b, mp * ps, pool.shape[2], pool.shape[3])
+
+
+def paged_write_step(
+    pool_k: jnp.ndarray,    # (P, ps, KV, Dh) one layer
+    pool_v: jnp.ndarray,
+    k_new: jnp.ndarray,     # (B, 1, KV, Dh)
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,       # (B,) absolute position of the new token
+    page_table: jnp.ndarray,  # (B, MP)
+    page_size: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter one decode token's K/V into its (page, offset) cell. The
+    owner guarantees each active lane's current tail page is exclusively
+    held (fresh tail-page swap at admission), so cross-lane collisions cannot
+    occur; inactive lanes point at the scratch page."""
+    b = pos.shape[0]
+    bidx = jnp.arange(b)
+    mp = page_table.shape[1]
+    page_idx = jnp.minimum(pos // page_size, mp - 1)
+    phys = page_table[bidx, page_idx]
+    slot = pos % page_size
+    pk = pool_k.at[phys, slot].set(k_new[:, 0])
+    pv = pool_v.at[phys, slot].set(v_new[:, 0])
+    return pk, pv
+
+
+def trim_cache_prefix(caches, n_valid) -> list:
+    """B=1 full-cache pytree with kv_pos masked beyond ``n_valid`` — the one
+    trim every pool-storage path uses (serve write-back, prime, retry
+    reuse): slots past the kept prefix hold K/V of discarded or
+    not-yet-requested tokens and must not be attended."""
+    n = jnp.asarray(n_valid, jnp.int32).reshape(1)
+    return [
+        {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n)}
+        for c in caches
+    ]
+
+
 def prefill_kv_pos(batch: int, slots: int, seq_len: int, ring: bool) -> jnp.ndarray:
     """kv_pos after prefilling seq_len tokens into a cache with `slots` slots."""
     j = jnp.arange(slots)

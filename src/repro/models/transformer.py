@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from .attention import (
     attention_decode,
+    attention_decode_paged,
     attention_forward,
     init_attention,
     project_kv_step,
@@ -34,7 +35,9 @@ from .attention import (
 from .cache import (
     Cache,
     init_attn_cache,
+    init_paged_pool,
     init_ssm_cache,
+    paged_write_step,
     prefill_kv_pos,
     ring_from_prefill,
     update_kv_pos,
@@ -406,6 +409,89 @@ def _moe_block_decode(bp, x, positions, cache_k, cache_v, kv_pos, cfg, window, r
     x = x + h
     m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
     return x + m, ck, cv
+
+
+def _dense_block_decode_paged(
+    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window, page_size
+):
+    """One layer paged decode: scatter the token's K/V into its page cell,
+    then attend through the page table. pool_k/v: (P, ps, KV, Dh)."""
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    h_in = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    k_new, v_new = project_kv_step(bp["attn"], h_in, positions, cfg)
+    pk, pv = paged_write_step(
+        pool_k, pool_v, k_new, v_new, pos1d[:, 0], page_table, page_size
+    )
+    h = attention_decode_paged(
+        bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg, window=window
+    )
+    x = x + h
+    x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x, pk, pv
+
+
+def _moe_block_decode_paged(
+    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window, page_size
+):
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    h_in = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    k_new, v_new = project_kv_step(bp["attn"], h_in, positions, cfg)
+    pk, pv = paged_write_step(
+        pool_k, pool_v, k_new, v_new, pos1d[:, 0], page_table, page_size
+    )
+    h = attention_decode_paged(
+        bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg, window=window
+    )
+    x = x + h
+    m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x + m, pk, pv
+
+
+def decode_step_paged(
+    params: Params,
+    cfg: ModelConfig,
+    pools: List[Cache],           # per group: {"k","v"} (L, P, ps, KV, Dh)
+    page_table: jnp.ndarray,      # (B, MP) physical page ids per lane
+    kv_pos: jnp.ndarray,          # (B, MP*ps) shared across full-cache groups
+    tokens: jnp.ndarray,          # (B,1)
+    pos: jnp.ndarray,             # (B,) absolute position of this token
+) -> Tuple[jnp.ndarray, List[Cache], jnp.ndarray]:
+    """serve_step against a *paged* KV pool: the batch's resident KV state
+    is the shared page pool plus per-lane page tables sized to actual token
+    counts, not B full-width lanes. Full-cache dense/moe groups only (the
+    same family :func:`~repro.models.prefill.supports_append` covers).
+    Pure function; jit with donate_argnums on pools and kv_pos."""
+    b = tokens.shape[0]
+    pos1 = pos[:, None].astype(jnp.int32)
+    positions = (
+        jnp.broadcast_to(pos1, (3, b, 1)) if cfg.rope_style == "mrope" else pos1
+    )
+    x = embed_tokens(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
+    page_size = pools[0]["k"].shape[2]
+    new_kv_pos = update_kv_pos(kv_pos, pos, False)
+
+    new_pools: List[Cache] = []
+    for spec, gp, pool in zip(layer_groups(cfg), params["groups"], pools):
+        assert spec.kind in ("dense", "moe"), (
+            f"paged decode requires full-cache dense/moe groups, got {spec.kind}"
+        )
+        block_fn = (
+            _dense_block_decode_paged if spec.kind == "dense"
+            else _moe_block_decode_paged
+        )
+
+        def body(x, scanned, _fn=block_fn):
+            bp, pk, pv = scanned
+            x, nk, nv = _fn(
+                bp, x, positions, pk, pv, page_table, new_kv_pos, cfg, 0, page_size
+            )
+            return x, (nk, nv)
+
+        x, (nk, nv) = scan_or_unroll(body, x, (gp, pool["k"], pool["v"]), cfg)
+        new_pools.append({"k": nk, "v": nv})
+
+    logits = unembed(params["embed"], x, cfg)
+    return logits, new_pools, new_kv_pos
 
 
 def decode_step(

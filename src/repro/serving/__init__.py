@@ -1,4 +1,5 @@
 from .engine import GenerateResult, InferenceEngine, JaxLLMService
+from .paged_kv import PagedKVAllocator
 from .sampling import sample
 from .scheduler import BatchedLLMService, BatchedServer, FinishedRequest
 from .session_cache import CacheEntry, SessionCachePool
@@ -8,6 +9,7 @@ __all__ = [
     "GenerateResult",
     "InferenceEngine",
     "JaxLLMService",
+    "PagedKVAllocator",
     "sample",
     "BatchedLLMService",
     "BatchedServer",

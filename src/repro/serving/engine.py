@@ -52,7 +52,7 @@ from ..models import (
     prefill_append,
     supports_append,
 )
-from ..models.cache import trim_kv_pos
+from ..models.cache import trim_cache_prefix
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
 from .sampling import sample
 from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
@@ -115,6 +115,78 @@ def chunked_append(
     return logits, caches, pos
 
 
+def prime_session_pool(
+    pool: Optional[SessionCachePool],
+    cache_key: str,
+    token_ids: List[int],
+    max_len: int,
+    max_input: int,
+    append_fn: Callable,   # (base_caches, suffix_ids, p0) -> (logits, caches, pos)
+    prefill_fn: Callable,  # (ids) -> (logits, caches, pos)
+) -> Tuple[bool, bool]:
+    """Migration warm-start core shared by the single-stream engine and the
+    batched scheduler (their ``prime`` methods differ only in the compute
+    callables and the overflow bound ``max_input``). Returns ``(warm,
+    stored)``: ``warm`` — the pool now holds KV for the full sequence;
+    ``stored`` — prefill work actually ran (False for the covers-everything
+    no-op).
+
+    Guards, in order: nothing to do without a pool/tokens; a context longer
+    than ``max_input`` gets truncated on the serving path and could never
+    prefix-match, so priming it would be wasted work; a fresh prime into a
+    full pool (entry-counted, and page-budgeted when an allocator is bound
+    — checked *after* the covers-everything branch, which needs no pages)
+    would be dropped by the low-priority put, so skip the prefill. A
+    diverged entry is invalidated; an entry covering everything is a no-op;
+    otherwise only the delta is chunk-prefilled. Extending an existing
+    entry keeps its provenance and (via the low-priority put) its LRU
+    position: a "serve" entry whose context replicated back is still the
+    node's own hot session — relabeling or demoting it would miscount the
+    next local hit as a migration warm start / make it the next eviction
+    victim."""
+    if pool is None or not token_ids:
+        return False, False
+    n = len(token_ids)
+    if n > max_input:
+        return False, False
+    entry = pool.peek(cache_key)
+    if entry is None and len(pool) >= pool.capacity:
+        return False, False
+    usable = 0
+    if entry is not None:
+        lcp = longest_common_prefix(entry.token_ids, token_ids)
+        if lcp < entry.pos and lcp < n:
+            pool.invalidate(cache_key)  # diverged: stale/edited history
+        elif entry.pos >= n:
+            return True, False          # already warm (covers everything)
+        else:
+            usable = lcp                # == entry.pos: extend the delta
+    if pool.allocator is not None and pool.allocator.n_free < pool.allocator.pages_for(n):
+        return False, False
+    if usable > 0:
+        base = (
+            pool.materialize(entry, usable, max_len)
+            if entry.paged else entry.caches
+        )
+        _, caches, _ = append_fn(base, token_ids[usable:], usable)
+    else:
+        _, caches, _ = prefill_fn(token_ids)
+    caches = trim_cache_prefix(caches, n)
+    # The prime's compute must finish *here*, inside the off-hot-path window
+    # (client think time): without the barrier, async-dispatched XLA work
+    # would still be running when the next serving turn starts and contend
+    # with its measured prefill/decode.
+    jax.block_until_ready(caches)
+    source = entry.source if usable > 0 else "prime"
+    pool.put(
+        cache_key,
+        CacheEntry(token_ids=list(token_ids), caches=caches, source=source),
+        low_priority=True,
+    )
+    pool.primes += 1
+    return True, True
+
+
 @dataclass
 class GenerateResult:
     """Outcome of one generation, with KV-reuse accounting."""
@@ -155,13 +227,33 @@ class InferenceEngine:
         max_len: int = 1024,
         bucket: int = 64,
         session_cache_capacity: int = 4,
+        page_size: int = 0,
+        kv_pages: int = 0,
     ) -> "InferenceEngine":
+        """With ``page_size``/``kv_pages`` > 0, the session pool stores its
+        entries *paged* (docs/architecture.md, "Paged session KV"): each
+        entry costs ceil(tokens/page_size) pages of the shared
+        :class:`~repro.serving.paged_kv.PagedKVAllocator` instead of a full
+        ``max_len``-width lane, and eviction is page-budgeted. Compute
+        stays dense on this single-stream path — hits are gathered back to
+        a dense view on demand."""
         params = init_params(jax.random.key(seed), cfg)
         pool = (
             SessionCachePool(capacity=session_cache_capacity)
             if session_cache_capacity > 0 and supports_append(cfg)
             else None
         )
+        if pool is not None and page_size > 0 and kv_pages > 0:
+            from .paged_kv import PagedKVAllocator
+
+            assert max_len % page_size == 0, (max_len, page_size)
+            pool.allocator = PagedKVAllocator(
+                cfg, page_size=page_size, n_pages=kv_pages
+            )
+            # pages are the memory bound now; lift the entry-count cap so
+            # it can never evict before the page budget does (every entry
+            # holds >= 1 page) — the many-tenant capacity win requires it
+            pool.capacity = max(pool.capacity, kv_pages)
         return cls(
             cfg=cfg, params=params, max_len=max_len, bucket=bucket,
             session_pool=pool,
@@ -226,11 +318,7 @@ class InferenceEngine:
     def _trim_for_pool(self, caches, n_valid: int):
         """Mask kv_pos beyond the kept prefix (decode may have run past a
         stop token between host syncs)."""
-        n = jnp.array([n_valid], jnp.int32)
-        return [
-            {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n)}
-            for c in caches
-        ]
+        return trim_cache_prefix(caches, n_valid)
 
     # -- migration warm-start ----------------------------------------------
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
@@ -240,59 +328,22 @@ class InferenceEngine:
         Called off the serving hot path when a replicated tokenized context
         lands on this node's KV replica: the roaming client's first turn
         here then prefix-matches the primed entry and prefills only its new
-        tokens instead of the whole stored history. If an entry for the key
-        already covers a prefix of ``token_ids`` (an earlier prime, or a
-        turn served here before the client roamed away), only the delta is
-        chunk-prefilled; if it already covers everything, this is a no-op.
-        Returns True when the pool now holds KV for the full sequence."""
-        pool = self.session_pool
-        if pool is None or not token_ids:
-            return False
-        n = len(token_ids)
-        if n > self.max_len - 1 - 16:
-            # Matches JaxLLMService.completion's overflow guard (its max
-            # generation reserve is 16): a context this long gets truncated
-            # from the oldest end on the serving path, which can never
-            # prefix-match a primed entry — priming would be a wasted full
-            # prefill that also invalidates any useful serve entry.
-            return False
+        tokens instead of the whole stored history. Guard/extension/
+        provenance semantics live in :func:`prime_session_pool` (shared
+        with the batched scheduler); the overflow bound matches
+        JaxLLMService.completion's truncation guard (max generation
+        reserve 16). Returns True when the pool now holds KV for the full
+        sequence."""
         t0 = time.perf_counter()
-        entry = pool.peek(cache_key)
-        if entry is None and len(pool) >= pool.capacity:
-            # Full pool and this session isn't in it: the low-priority
-            # insert below would be evicted immediately (primes never
-            # displace the node's serve entries) — skip the prefill work.
-            return False
-        usable = 0
-        if entry is not None:
-            lcp = longest_common_prefix(entry.token_ids, token_ids)
-            if lcp < entry.pos and lcp < n:
-                pool.invalidate(cache_key)  # diverged: stale/edited history
-            elif entry.pos >= n:
-                return True                 # already warm (covers everything)
-            else:
-                usable = lcp                # extend: chunk-prefill the delta
-        if usable > 0:
-            _, caches, _ = self._append_prefill(
-                entry.caches, token_ids[usable:], usable
-            )
-        else:
-            _, caches, _ = self._full_prefill(token_ids)
-        caches = self._trim_for_pool(caches, n)
-        # Prime compute finishes *here*, inside the off-hot-path window
-        # (client think time): without the barrier, async-dispatched XLA
-        # work would still be running when the next serving turn starts and
-        # contend with its measured prefill/decode.
-        jax.block_until_ready(caches)
-        pool.put(
-            cache_key,
-            CacheEntry(token_ids=list(token_ids), caches=caches, source="prime"),
-            low_priority=True,
+        warm, stored = prime_session_pool(
+            self.session_pool, cache_key, list(token_ids),
+            self.max_len, self.max_len - 1 - 16,
+            self._append_prefill, self._full_prefill,
         )
-        pool.primes += 1
-        self.prime_count += 1
-        self.prime_ms += (time.perf_counter() - t0) * 1e3
-        return True
+        if stored:
+            self.prime_count += 1
+            self.prime_ms += (time.perf_counter() - t0) * 1e3
+        return warm
 
     # -- public API ------------------------------------------------------------
     def generate_ex(
@@ -315,11 +366,18 @@ class InferenceEngine:
         if pool is not None:
             entry, usable = pool.match(cache_key, input_ids)
         if entry is not None and usable > 0:
-            base = entry.caches
-            if usable < entry.pos:
-                # retry/resend: incoming ids stop inside the cached prefix —
-                # slots past `usable` hold tokens not in this request
-                base = self._trim_for_pool(base, usable)
+            if entry.paged:
+                # paged entry: gather the pages into a fresh dense view with
+                # kv_pos already masked to `usable` (covers the retry/resend
+                # trim too)
+                base = pool.materialize(entry, usable, self.max_len)
+            else:
+                base = entry.caches
+                if usable < entry.pos:
+                    # retry/resend: incoming ids stop inside the cached
+                    # prefix — slots past `usable` hold tokens not in this
+                    # request
+                    base = self._trim_for_pool(base, usable)
             logits, caches, pos = self._append_prefill(
                 base, input_ids[usable:], usable
             )
@@ -433,10 +491,13 @@ class JaxLLMService:
         max_len: int = 2048,
         kv_reuse: bool = True,
         session_cache_capacity: int = 4,
+        page_size: int = 0,
+        kv_pages: int = 0,
     ) -> "JaxLLMService":
         engine = InferenceEngine.create(
             cfg, seed=seed, max_len=max_len,
             session_cache_capacity=session_cache_capacity if kv_reuse else 0,
+            page_size=page_size, kv_pages=kv_pages,
         )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, engine=engine, tokenizer=tok, kv_reuse=kv_reuse)

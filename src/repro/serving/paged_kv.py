@@ -1,0 +1,242 @@
+"""Block-granular paged KV allocator for the serving layer.
+
+Full-width decode caches allocate ``max_len`` slots per batched-server lane
+and per :class:`~repro.serving.session_cache.SessionCachePool` entry, so a
+node's resident KV grows with *worst-case* context length times tenant
+count — the memory wall on resource-limited edge nodes. This module replaces
+that with the vLLM-style logical/physical split: one shared physical pool of
+fixed-size KV pages per node service, and per-sequence *page tables* (lists
+of physical page ids) sized to each sequence's actual token count.
+
+Layout invariant: a sequence's pages, concatenated in table order,
+reproduce the linear ``slot == absolute position`` layout of the full cache
+exactly. Compute paths therefore stay position-masked and unchanged —
+decode gathers the table into a transient linear view
+(:func:`repro.models.cache.gather_pages` /
+:func:`repro.models.transformer.decode_step_paged`), and prefill runs dense
+and writes through to pages afterwards — so the paged path is
+greedy-equivalent to the full-width path while resident KV between steps is
+``used_pages * page_bytes``, not ``n_lanes * max_len``.
+
+Ownership is reference-counted per page. Prefix reuse increfs the shared
+full pages of a pool entry instead of copying the lane (a partially-filled
+tail page is swapped for a fresh page the write-through fills, so an active
+lane's tail is always exclusively held), and finished-slot write-back
+*moves* the slot's pages into the pool entry — zero-copy in both
+directions. Page id 0 is reserved as a scratch page: table padding and
+inactive batch lanes point at it, and anything written there is garbage by
+design, masked via kv_pos.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, layer_groups, supports_append
+from ..models.cache import init_paged_pool
+
+# Physical page 0 is never allocated: page-table padding points here and
+# inactive decode lanes write here. Its contents are garbage by design.
+SCRATCH_PAGE = 0
+
+
+class PagedKVAllocator:
+    """Owns the shared physical KV page pool of one node service.
+
+    ``n_pages`` counts physical pages including the reserved scratch page,
+    so ``n_pages - 1`` pages are allocatable; each page holds ``page_size``
+    token positions across every layer of every group. The allocator is
+    deliberately policy-free: it allocates, refcounts, and moves bytes
+    between the dense and paged layouts. *What* to evict under pressure is
+    the :class:`~repro.serving.session_cache.SessionCachePool`'s call
+    (page-budgeted LRU), and growth/requeue decisions belong to the
+    :class:`~repro.serving.scheduler.BatchedServer`.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        page_size: int = 16,
+        n_pages: int = 256,
+        dtype=None,
+    ) -> None:
+        assert supports_append(cfg), (
+            "paged KV requires full-cache dense/moe groups "
+            f"(arch={cfg.arch_type}, attn_variant={cfg.attn_variant})"
+        )
+        assert page_size > 0 and n_pages > 1, (page_size, n_pages)
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pools: List[Dict[str, jnp.ndarray]] = [
+            init_paged_pool(cfg, spec.n_blocks, n_pages, page_size, dtype)
+            for spec in layer_groups(cfg)
+        ]
+        # page 0 reserved as scratch; LIFO free list keeps reuse warm
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._ref = np.zeros(n_pages, np.int32)
+        self._gather_fns: Dict[int, object] = {}
+        self._scatter_fns: Dict[int, object] = {}
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of one physical page across all layers/groups (k + v)."""
+        total = 0
+        for pool in self.pools:
+            for name in ("k", "v"):
+                a = pool[name]
+                total += (a.size // a.shape[1]) * a.dtype.itemsize
+        return total
+
+    @property
+    def resident_kv_bytes(self) -> int:
+        return self.used_pages * self.page_bytes
+
+    @property
+    def total_kv_bytes(self) -> int:
+        return (self.n_pages - 1) * self.page_bytes
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` positions (at least one)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    # -- page lifecycle -------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages (refcount 1 each), or None if the pool
+        can't satisfy the request — the caller decides whether to reclaim
+        via the session pool, requeue, or degrade."""
+        if n <= 0:
+            return []
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._ref[pages] = 1
+        return pages
+
+    def incref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert p != SCRATCH_PAGE and self._ref[p] > 0, p
+            self._ref[p] += 1
+
+    def decref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert p != SCRATCH_PAGE and self._ref[p] > 0, p
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    # -- layout moves (jitted once per dense width) ---------------------
+    def table_for(self, pages: Sequence[int], width: int) -> np.ndarray:
+        mp = width // self.page_size
+        assert width % self.page_size == 0, (width, self.page_size)
+        assert len(pages) <= mp, (len(pages), mp)
+        table = np.full((mp,), SCRATCH_PAGE, np.int32)
+        table[: len(pages)] = pages
+        return table
+
+    def _scatter_fn(self, width: int):
+        """Write a dense (B=1, width) lane through a page table. Shared
+        prefix pages receive identical bytes (the dense lane was gathered
+        from them) and padding rows land in the scratch page, so one
+        compile per dense width covers every admission/store."""
+        if width not in self._scatter_fns:
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(pools, dense, table):
+                out = []
+                for pool, c in zip(pools, dense):
+                    l = c["k"].shape[0]
+                    chunk_shape = (l, -1, self.page_size) + c["k"].shape[3:]
+                    out.append({
+                        "k": pool["k"].at[:, table].set(
+                            c["k"][:, 0].reshape(chunk_shape).astype(pool["k"].dtype)
+                        ),
+                        "v": pool["v"].at[:, table].set(
+                            c["v"][:, 0].reshape(chunk_shape).astype(pool["v"].dtype)
+                        ),
+                    })
+                return out
+
+            self._scatter_fns[width] = fn
+        return self._scatter_fns[width]
+
+    def _gather_fn(self, width: int):
+        if width not in self._gather_fns:
+
+            @jax.jit
+            def fn(pools, table, n_valid):
+                j = jnp.arange(width, dtype=jnp.int32)
+                kv_pos = jnp.where(j < n_valid, j, -1)[None, :]
+                out = []
+                for pool in pools:
+                    l = pool["k"].shape[0]
+                    k = pool["k"][:, table]          # (L, MP, ps, KV, Dh)
+                    v = pool["v"][:, table]
+                    flat = (l, 1, width) + pool["k"].shape[3:]
+                    out.append({
+                        "k": k.reshape(flat),
+                        "v": v.reshape(flat),
+                        "kv_pos": kv_pos,
+                    })
+                return out
+
+            self._gather_fns[width] = fn
+        return self._gather_fns[width]
+
+    def write_through(self, pages: Sequence[int], dense: List[Dict]) -> None:
+        """Scatter a dense B=1 lane (width = pages' span, scratch-padded)
+        into ``pages``. The lane width must be a page_size multiple."""
+        width = int(dense[0]["k"].shape[2])
+        table = jnp.asarray(self.table_for(pages, width))
+        self.pools = self._scatter_fn(width)(self.pools, dense, table)
+
+    def store(self, dense: List[Dict], n_tokens: int) -> Optional[List[int]]:
+        """Allocate pages for ``n_tokens`` and write the dense lane through.
+        Returns the page list (caller owns the refs), or None when the pool
+        is out of pages."""
+        pages = self.alloc(self.pages_for(n_tokens))
+        if pages is None:
+            return None
+        self.write_through(pages, dense)
+        return pages
+
+    def gather(
+        self, pages: Sequence[int], n_valid: int, width: int
+    ) -> List[Dict]:
+        """Materialize pages as a dense B=1 cache pytree of ``width`` slots
+        with kv_pos valid on [0, n_valid) — fresh buffers, safe to hand to
+        compute paths that donate. Pages beyond width // page_size are not
+        gathered (callers never need positions >= width)."""
+        mp = width // self.page_size
+        table = jnp.asarray(self.table_for(list(pages)[:mp], width))
+        return self._gather_fn(width)(
+            self.pools, table, jnp.int32(n_valid)
+        )
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_pages": self.n_pages - 1,
+            "page_size": self.page_size,
+            "used_pages": self.used_pages,
+            "free_pages": self.n_free,
+            "page_bytes": self.page_bytes,
+            "resident_kv_bytes": self.resident_kv_bytes,
+            "total_kv_bytes": self.total_kv_bytes,
+        }

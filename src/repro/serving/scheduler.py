@@ -41,18 +41,20 @@ from ..core.manager import ServiceCapabilities, ServiceResult
 from ..models import (
     ModelConfig,
     decode_step,
+    decode_step_paged,
     init_params,
     make_decode_caches,
     prefill,
     prefill_append,
     supports_append,
 )
-from ..models.cache import trim_kv_pos
+from ..models.cache import trim_cache_prefix
 from ..store.network import Network
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
-from .engine import _bucket, chunked_append, truncate_for_cache
+from .engine import _bucket, chunked_append, prime_session_pool, truncate_for_cache
+from .paged_kv import SCRATCH_PAGE, PagedKVAllocator
 from .sampling import sample
-from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
+from .session_cache import CacheEntry, SessionCachePool
 
 
 @dataclass
@@ -94,6 +96,9 @@ class BatchedServer:
         max_len: int = 512,
         stop_tokens=(EOS, IM_END),
         session_pool: Optional[SessionCachePool] = None,
+        paged: bool = False,
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,
     ) -> None:
         assert cfg.attn_variant == "full" and cfg.arch_type in ("dense", "moe", "vlm"), (
             "batched server currently supports full-cache attention archs"
@@ -102,14 +107,59 @@ class BatchedServer:
         self.n_slots, self.max_len = n_slots, max_len
         self.stop_tokens = set(stop_tokens)
         self.session_pool = session_pool
-        self.caches = make_decode_caches(cfg, n_slots, max_len, dtype=jnp.float32
-                                         if cfg.compute_dtype == "float32" else None)
+        self.paged = paged
         self.slots: List[Optional[SlotState]] = [None] * n_slots
         self.queue: List = []
         self.finished: List[FinishedRequest] = []
         self._submit_times: Dict[int, float] = {}
         self._next_tok = np.zeros((n_slots,), np.int32)
         self._req_seq = 0
+
+        if paged:
+            # Block-granular KV: one shared page pool backs every decode
+            # lane AND every session-pool entry; slots hold page lists sized
+            # to their actual token count (docs/architecture.md, "Paged
+            # session KV"). Default page budget equals the full-width
+            # worst case — callers shrink it to trade memory for tenants.
+            assert supports_append(cfg), (
+                "paged batched serving requires full-cache dense/moe groups"
+            )
+            assert max_len % page_size == 0, (max_len, page_size)
+            if kv_pages is None:
+                cap = session_pool.capacity if session_pool is not None else 0
+                kv_pages = 1 + (n_slots + cap) * (max_len // page_size)
+            self.allocator = PagedKVAllocator(
+                cfg, page_size=page_size, n_pages=kv_pages
+            )
+            if session_pool is not None:
+                assert session_pool.allocator is None, (
+                    "session pool already bound to another allocator"
+                )
+                session_pool.allocator = self.allocator
+                # pages are the memory bound now; lift the entry-count cap
+                # so it can never evict before the page budget does (every
+                # entry holds >= 1 page)
+                session_pool.capacity = max(session_pool.capacity, kv_pages)
+            self.caches = None
+            self.slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            self._table = np.full(
+                (n_slots, max_len // page_size), SCRATCH_PAGE, np.int32
+            )
+            self._kv_pos = jnp.full((n_slots, max_len), -1, jnp.int32)
+
+            @partial(jax.jit, donate_argnums=(1, 3))
+            def _decode_paged(params, pools, table, kv_pos, tokens, pos):
+                return decode_step_paged(
+                    params, cfg, pools, table, kv_pos, tokens, pos
+                )
+
+            self._decode_paged = _decode_paged
+        else:
+            self.allocator = None
+            self.caches = make_decode_caches(
+                cfg, n_slots, max_len,
+                dtype=jnp.float32 if cfg.compute_dtype == "float32" else None,
+            )
 
         @jax.jit
         def _prefill_one(params, tokens, true_len):
@@ -134,10 +184,20 @@ class BatchedServer:
     ) -> int:
         """Queue a request. With ``cache_key`` and a ``session_pool``, the
         request reuses any cached KV prefix for that key on admission and
-        registers its final KV state back under the key on completion."""
+        registers its final KV state back under the key on completion.
+
+        Overlong inputs are truncated here, at the queue boundary — oldest
+        tokens dropped, generation budget capped to the remaining slots —
+        exactly like the single-stream service's
+        :func:`~repro.serving.engine.truncate_for_cache` path, so a too-long
+        context degrades identically on every submission path instead of
+        tripping the slot-capacity assert and killing the node service."""
+        ids, max_new = truncate_for_cache(
+            [], list(token_ids), self.max_len, max_new
+        )
         rid = self._req_seq
         self._req_seq += 1
-        self.queue.append((rid, list(token_ids), max_new, cache_key))
+        self.queue.append((rid, ids, max_new, cache_key))
         self._submit_times[rid] = time.perf_counter()
         return rid
 
@@ -145,52 +205,104 @@ class BatchedServer:
     def busy(self) -> bool:
         return any(s is not None for s in self.slots) or bool(self.queue)
 
+    # -- KV memory accounting (benchmarks/paged_kv_bench.py) -------------
+    @staticmethod
+    def _cache_bytes(caches) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(caches):
+            if leaf.ndim >= 4:  # k/v tensors only; kv_pos bookkeeping excluded
+                total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    def resident_kv_bytes(self) -> int:
+        """KV bytes held between steps: pages in use for the paged server
+        (slots and session-pool entries share the pool); for the full-width
+        server, the always-allocated batched lanes plus every pool entry
+        (entries of a shared pool may themselves be paged — counted at
+        their page cost)."""
+        if self.paged:
+            return self.allocator.resident_kv_bytes
+        total = self._cache_bytes(self.caches)
+        pool = self.session_pool
+        if pool is not None:
+            for e in pool._entries.values():
+                if e.paged and pool.allocator is not None:
+                    total += len(e.pages) * pool.allocator.page_bytes
+                elif e.caches is not None:
+                    total += self._cache_bytes(e.caches)
+        return total
+
+    def total_kv_bytes(self) -> int:
+        """Worst-case KV budget this server can consume."""
+        if self.paged:
+            return self.allocator.total_kv_bytes
+        total = self._cache_bytes(self.caches)
+        pool = self.session_pool
+        if pool is None:
+            return total
+        if pool.allocator is not None:
+            # shared pool bound to a paged allocator elsewhere on the node:
+            # the pool's budget is its page pool, not entry-count * lane
+            # (capacity is lifted to the page count in that mode)
+            return total + pool.allocator.total_kv_bytes
+        per_lane = self._cache_bytes(self.caches) // max(1, self.n_slots)
+        return total + pool.capacity * per_lane
+
     # -- slot admission -------------------------------------------------
     def _insert_slot(
         self, idx: int, rid: int, ids: List[int], max_new: int,
         cache_key: Optional[str] = None,
-    ) -> None:
+    ) -> bool:
+        """Admit one queued request into free slot ``idx``. Returns False
+        (paged mode only) when the page pool can't cover the request even
+        after reclaiming evictable session entries — the caller requeues and
+        retries once running slots release pages."""
         n = len(ids)
-        # Loud capacity check for BOTH admission paths: the reuse path's
-        # scatter writes use mode="drop" and would otherwise silently lose
-        # KV past max_len and register a poisoned pool entry.
+        # Loud capacity check for BOTH admission paths: submit() truncates
+        # at the queue boundary, so tripping this means a caller bypassed
+        # the queue — the reuse path's scatter writes use mode="drop" and
+        # would otherwise silently lose KV past max_len and register a
+        # poisoned pool entry.
         assert n < self.max_len, (n, self.max_len)
         entry, usable = None, 0
         if self.session_pool is not None and cache_key is not None:
             entry, usable = self.session_pool.match(cache_key, ids)
-        warm = False
-        if entry is not None and usable > 0:
-            warm = entry.source == "prime"
-            base = entry.caches
-            if usable < entry.pos:
-                base = [
-                    {"k": c["k"], "v": c["v"],
-                     "kv_pos": trim_kv_pos(c["kv_pos"], jnp.array([usable], jnp.int32))}
-                    for c in base
-                ]
-            logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
-        else:
-            usable = 0
-            # bucketed shape so the jitted prefill compiles once per bucket,
-            # not once per distinct prompt length (true_len masks padding)
-            s = min(self.max_len, _bucket(n, 16))
-            toks = np.zeros((1, s), np.int32)
-            toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
-            logits, one_caches, pos = self._prefill_one(
-                self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
-            )
 
-        new_caches = []
-        for big, small in zip(self.caches, one_caches):
-            merged = {}
-            for k in big:
-                if isinstance(big[k], dict):
-                    merged[k] = {kk: self._put_entry(big[k][kk], small[k][kk], idx, kk)
-                                 for kk in big[k]}
+        if self.paged:
+            admitted = self._admit_paged(idx, ids, entry, usable, cache_key)
+            if admitted is None:
+                return False
+            logits, pos, usable = admitted
+        else:
+            if entry is not None and usable > 0:
+                if entry.paged:
+                    # a full-width server sharing a pool whose entries are
+                    # paged (e.g. with a paged single-stream engine on the
+                    # same node): gather to a dense view, kv_pos masked to
+                    # `usable`
+                    base = self.session_pool.materialize(entry, usable, self.max_len)
                 else:
-                    merged[k] = self._put_entry(big[k], small[k], idx, k)
-            new_caches.append(merged)
-        self.caches = new_caches
+                    base = entry.caches
+                    if usable < entry.pos:
+                        base = trim_cache_prefix(base, usable)
+                logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
+            else:
+                usable = 0
+                logits, one_caches, pos = self._bucketed_prefill(ids)
+
+            new_caches = []
+            for big, small in zip(self.caches, one_caches):
+                merged = {}
+                for k in big:
+                    if isinstance(big[k], dict):
+                        merged[k] = {kk: self._put_entry(big[k][kk], small[k][kk], idx, kk)
+                                     for kk in big[k]}
+                    else:
+                        merged[k] = self._put_entry(big[k], small[k], idx, k)
+                new_caches.append(merged)
+            self.caches = new_caches
+
+        warm = entry is not None and usable > 0 and entry.source == "prime"
         self._pos = self._pos.at[idx].set(int(pos[0]))
         self._next_tok[idx] = int(jnp.argmax(logits[0]))
         self.slots[idx] = SlotState(
@@ -198,6 +310,116 @@ class BatchedServer:
             cache_key=cache_key, token_ids=list(ids), reused_tokens=usable,
             warm_start=warm,
         )
+        return True
+
+    def _bucketed_prefill(self, ids: List[int]):
+        """From-scratch B=1 prefill at a bucketed shape so the jitted
+        prefill compiles once per bucket, not once per distinct prompt
+        length (true_len masks padding)."""
+        n = len(ids)
+        s = min(self.max_len, _bucket(n, 16))
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :n] = np.asarray(ids, np.int32) % self.cfg.vocab_size
+        return self._prefill_one(
+            self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
+        )
+
+    # -- paged admission ------------------------------------------------
+    def _alloc_pages(
+        self, m: int, exclude: Optional[str] = None
+    ) -> Optional[List[int]]:
+        """Allocate ``m`` pages, reclaiming page-budgeted LRU session
+        entries (never ``exclude`` — the entry being reused) on pressure."""
+        pages = self.allocator.alloc(m)
+        if pages is None and self.session_pool is not None:
+            self.session_pool.reclaim(m, exclude=exclude)
+            pages = self.allocator.alloc(m)
+        return pages
+
+    def _reclaimable_pages(self, exclude: Optional[str]) -> int:
+        """Pages the pool could actually return to the free list by evicting
+        every entry except ``exclude``: only pages whose sole reference is
+        the entry count (pages shared with a live slot survive eviction)."""
+        pool = self.session_pool
+        if pool is None:
+            return 0
+        return sum(
+            1
+            for k, e in pool._entries.items()
+            if k != exclude and e.paged
+            for p in e.pages
+            if self.allocator.refcount(p) == 1
+        )
+
+    def _admit_paged(
+        self, idx: int, ids: List[int], entry: Optional[CacheEntry],
+        usable: int, cache_key: Optional[str],
+    ):
+        """Paged slot admission: share the matched entry's full prefix pages
+        (incref, zero-copy), swap the partially filled tail page for a fresh
+        exclusively-held one,
+        allocate fresh pages for the suffix, run the (dense, transient)
+        suffix prefill, and write the lane through to the slot's pages.
+        Returns (logits, pos, usable) or None when pages can't be found.
+
+        A feasibility check runs first: if the fresh pages needed exceed
+        free + genuinely reclaimable (refcount-1 entry pages, donor
+        excluded), fail fast — before any incref, device page copy, or
+        reclaim — so a blocked head-of-line request neither destroys other
+        tenants' warm entries for nothing nor pays wasted page churn per
+        retry tick."""
+        alloc, pool = self.allocator, self.session_pool
+        ps = alloc.page_size
+        n = len(ids)
+        n_shared = alloc.pages_for(usable) if (entry is not None and usable > 0) else 0
+        cow = 1 if (n_shared and usable % ps) else 0
+        fresh_needed = cow + max(0, alloc.pages_for(n + 1) - n_shared)
+        if fresh_needed > alloc.n_free + self._reclaimable_pages(cache_key):
+            return None
+        pages: List[int] = []
+        if entry is not None and usable > 0:
+            shared = list(entry.pages[: alloc.pages_for(usable)])
+            alloc.incref(shared)
+            if usable % ps:
+                # the tail page is partially filled: this slot will append
+                # into it, and the donor entry (or a concurrent admission
+                # for the same key) still references it — swap in a fresh
+                # page so an active lane's tail page is always exclusively
+                # held. No byte copy needed: write_through below rewrites
+                # the whole lane (tail-page prefix included) from the dense
+                # view gathered off the donor.
+                fresh = self._alloc_pages(1, exclude=cache_key)
+                if fresh is None:
+                    alloc.decref(shared)
+                    shared, usable = [], 0
+                else:
+                    alloc.decref(shared[-1:])
+                    shared[-1] = fresh[0]
+            pages = shared
+        else:
+            usable = 0
+        # cover n + 1 positions: the first decode token writes at pos n, so
+        # admission itself guarantees at least one generated token even if
+        # the pool is exhausted afterwards
+        more = alloc.pages_for(n + 1) - len(pages)
+        if more > 0:
+            fresh = self._alloc_pages(more, exclude=cache_key)
+            if fresh is None:
+                if pages:
+                    alloc.decref(pages)
+                return None
+            pages += fresh
+
+        if usable > 0:
+            base = pool.materialize(entry, usable, self.max_len)
+            logits, dense, pos = self._append_suffix(base, ids[usable:], usable)
+        else:
+            logits, dense, pos = self._bucketed_prefill(ids)
+        alloc.write_through(pages, dense)
+        self.slot_pages[idx] = pages
+        self._table[idx, :] = alloc.table_for(pages, self.max_len)
+        self._kv_pos = self._kv_pos.at[idx].set(dense[0]["kv_pos"][0])
+        return logits, pos, usable
 
     def _append_suffix(self, caches, suffix_ids: List[int], p0: int):
         """Chunk-prefill ``suffix_ids`` into B=1 ``caches`` starting at p0
@@ -221,11 +443,24 @@ class BatchedServer:
 
     # -- slot completion -> pool write-back -----------------------------
     def _release_to_pool(self, idx: int, st: SlotState) -> None:
-        """Copy the finished slot's KV lane out of the batched caches and
-        register it in the session pool: the next turn of this session —
-        on this path or the single-stream engine path — is suffix-only."""
+        """Register the finished slot's KV state in the session pool so the
+        next turn of this session — on this path or the single-stream
+        engine path — is suffix-only. Paged mode *moves* the slot's pages
+        into the pool entry (zero-copy; pages past the kept prefix are
+        freed); full-width mode copies the slot's lane out of the batched
+        caches."""
         prefix = st.token_ids + st.generated
-        n_valid = jnp.array([len(prefix)], jnp.int32)
+        if self.paged:
+            pages = self.slot_pages[idx]
+            keep = self.allocator.pages_for(len(prefix))
+            if keep < len(pages):
+                self.allocator.decref(pages[keep:])
+            self.slot_pages[idx] = []
+            self.session_pool.put(
+                st.cache_key,
+                CacheEntry(token_ids=prefix, pages=pages[:keep], source="serve"),
+            )
+            return
         one = []
         for c in self.caches:
             if not isinstance(c, dict) or "kv_pos" not in c:
@@ -233,19 +468,68 @@ class BatchedServer:
             one.append({
                 "k": c["k"][:, idx : idx + 1],
                 "v": c["v"][:, idx : idx + 1],
-                "kv_pos": trim_kv_pos(c["kv_pos"][idx : idx + 1], n_valid),
+                "kv_pos": c["kv_pos"][idx : idx + 1],
             })
+        one = trim_cache_prefix(one, len(prefix))
         self.session_pool.put(
             st.cache_key, CacheEntry(token_ids=prefix, caches=one, source="serve")
         )
+
+    def _finish_slot(self, idx: int, st: SlotState) -> None:
+        """Retire a slot: write its KV back to the session pool (or free its
+        pages), record the FinishedRequest, and open the slot."""
+        if self.session_pool is not None and st.cache_key is not None:
+            self._release_to_pool(idx, st)
+        elif self.paged and self.slot_pages[idx]:
+            self.allocator.decref(self.slot_pages[idx])
+            self.slot_pages[idx] = []
+        if self.paged:
+            # inactive lanes keep decoding into the scratch page until the
+            # slot is re-admitted; their kv_pos row is junk but unread
+            self._table[idx, :] = SCRATCH_PAGE
+        self.finished.append(
+            FinishedRequest(
+                st.request_id,
+                st.generated,
+                self._submit_times.pop(st.request_id),
+                time.perf_counter(),
+                cache_hit=st.reused_tokens > 0,
+                reused_tokens=st.reused_tokens,
+                warm_start=st.warm_start,
+                batch_size=st.batch_size,
+            )
+        )
+        self.slots[idx] = None
 
     def step(self) -> None:
         """One scheduler tick: admit queued work into free slots, then decode
         every occupied slot in a single batched call."""
         for idx in range(self.n_slots):
             if self.slots[idx] is None and self.queue:
-                rid, ids, max_new, cache_key = self.queue.pop(0)
-                self._insert_slot(idx, rid, ids, max_new, cache_key)
+                rid, ids, max_new, cache_key = self.queue[0]
+                if self._insert_slot(idx, rid, ids, max_new, cache_key):
+                    self.queue.pop(0)
+                    continue
+                if any(s is not None for s in self.slots):
+                    break  # out of pages: retry once running slots finish
+                # last resort before declaring the pool too small: the only
+                # reclaimable pages may belong to this very session's entry
+                # (excluded from reclaim as the reuse donor) — evict it and
+                # admit cold rather than killing the node service
+                if (
+                    self.session_pool is not None and cache_key is not None
+                    and cache_key in self.session_pool
+                ):
+                    self.session_pool.invalidate(cache_key)
+                    if self._insert_slot(idx, rid, ids, max_new, cache_key):
+                        self.queue.pop(0)
+                        continue
+                raise RuntimeError(
+                    f"paged KV pool too small: request of {len(ids)} tokens "
+                    f"cannot be admitted with {self.allocator.n_free} free "
+                    f"pages of {self.allocator.page_size} and nothing left "
+                    "to evict — raise kv_pages or lower max_len"
+                )
         n_active = sum(s is not None for s in self.slots)
         if n_active == 0:
             return
@@ -253,8 +537,34 @@ class BatchedServer:
             if st is not None:
                 st.batch_size = max(st.batch_size, n_active)
 
-        tokens = jnp.asarray(self._next_tok)[:, None]
-        logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)
+        if self.paged:
+            # grow-on-demand: each active slot needs a page covering the
+            # position it is about to write; a slot that cannot get one
+            # (pool exhausted, nothing evictable) retires cleanly with the
+            # tokens it has — never a silent mode="drop" KV loss
+            ps = self.allocator.page_size
+            for idx, st in enumerate(self.slots):
+                if st is None:
+                    continue
+                if st.pos >= len(self.slot_pages[idx]) * ps:
+                    fresh = self._alloc_pages(1, exclude=st.cache_key)
+                    if fresh is None:
+                        self._finish_slot(idx, st)
+                        continue
+                    self.slot_pages[idx].append(fresh[0])
+                    self._table[idx, len(self.slot_pages[idx]) - 1] = fresh[0]
+            if not any(s is not None for s in self.slots):
+                return
+            tokens = jnp.asarray(self._next_tok)[:, None]
+            logits, pools, kv_pos = self._decode_paged(
+                self.params, self.allocator.pools, jnp.asarray(self._table),
+                self._kv_pos, tokens, self._pos,
+            )
+            self.allocator.pools = pools
+            self._kv_pos = kv_pos
+        else:
+            tokens = jnp.asarray(self._next_tok)[:, None]
+            logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)
         self._pos = self._pos + 1
         nxt = np.asarray(sample(logits[:, 0]))
 
@@ -269,21 +579,7 @@ class BatchedServer:
                 or len(st.generated) >= st.max_new
                 or st.pos >= self.max_len - 1
             ):
-                if self.session_pool is not None and st.cache_key is not None:
-                    self._release_to_pool(idx, st)
-                self.finished.append(
-                    FinishedRequest(
-                        st.request_id,
-                        st.generated,
-                        self._submit_times.pop(st.request_id),
-                        time.perf_counter(),
-                        cache_hit=st.reused_tokens > 0,
-                        reused_tokens=st.reused_tokens,
-                        warm_start=st.warm_start,
-                        batch_size=st.batch_size,
-                    )
-                )
-                self.slots[idx] = None
+                self._finish_slot(idx, st)
             else:
                 self._next_tok[idx] = int(nxt[idx])
 
@@ -301,54 +597,15 @@ class BatchedServer:
         :meth:`repro.serving.engine.InferenceEngine.prime`, called off the
         serving hot path when a replicated tokenized context lands on this
         node. A later ``submit(..., cache_key=...)`` for the session then
-        admits with a suffix-only chunk prefill. Same guards as the engine:
-        skip contexts that would overflow (they get truncated on the serving
-        path and could never prefix-match), delta-extend a covering entry,
-        never evict the node's serve entries (low-priority insert)."""
-        pool = self.session_pool
-        if pool is None or not token_ids:
-            return False
-        n = len(token_ids)
-        if n >= self.max_len - 1:
-            return False
-        entry = pool.peek(cache_key)
-        if entry is None and len(pool) >= pool.capacity:
-            return False
-        usable = 0
-        if entry is not None:
-            lcp = longest_common_prefix(entry.token_ids, token_ids)
-            if lcp < entry.pos and lcp < n:
-                pool.invalidate(cache_key)  # diverged: stale/edited history
-            elif entry.pos >= n:
-                return True                 # already warm (covers everything)
-            else:
-                usable = lcp                # == entry.pos: extend the delta
-        if usable > 0:
-            _, caches, _ = self._append_suffix(
-                entry.caches, token_ids[usable:], usable
-            )
-        else:
-            s = min(self.max_len, _bucket(n, 16))
-            toks = np.zeros((1, s), np.int32)
-            toks[0, :n] = np.asarray(token_ids, np.int32) % self.cfg.vocab_size
-            _, caches, _ = self._prefill_one(
-                self.params, jnp.asarray(toks), jnp.array([n], jnp.int32)
-            )
-        n_valid = jnp.array([n], jnp.int32)
-        caches = [
-            {"k": c["k"], "v": c["v"], "kv_pos": trim_kv_pos(c["kv_pos"], n_valid)}
-            for c in caches
-        ]
-        # finish the prime inside the off-hot-path window — see
-        # InferenceEngine.prime for why the barrier matters
-        jax.block_until_ready(caches)
-        pool.put(
-            cache_key,
-            CacheEntry(token_ids=list(token_ids), caches=caches, source="prime"),
-            low_priority=True,
+        admits with a suffix-only chunk prefill. Guard/extension/provenance
+        semantics live in :func:`repro.serving.engine.prime_session_pool`
+        (shared with the single-stream engine)."""
+        warm, _ = prime_session_pool(
+            self.session_pool, cache_key, list(token_ids),
+            self.max_len, self.max_len - 2,
+            self._append_suffix, self._bucketed_prefill,
         )
-        pool.primes += 1
-        return True
+        return warm
 
 
 @dataclass
@@ -409,6 +666,9 @@ class BatchedLLMService:
         n_slots: int = 4,
         max_len: int = 512,
         session_cache_capacity: int = 8,
+        paged: bool = False,
+        page_size: int = 16,
+        kv_pages: Optional[int] = None,
     ) -> "BatchedLLMService":
         params = init_params(jax.random.key(seed), cfg)
         pool = (
@@ -417,7 +677,9 @@ class BatchedLLMService:
             else None
         )
         server = BatchedServer(
-            cfg, params, n_slots=n_slots, max_len=max_len, session_pool=pool
+            cfg, params, n_slots=n_slots, max_len=max_len, session_pool=pool,
+            paged=paged and supports_append(cfg), page_size=page_size,
+            kv_pages=kv_pages,
         )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, server=server, tokenizer=tok)

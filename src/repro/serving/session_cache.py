@@ -18,15 +18,31 @@ Entries carry their provenance (``source``): ``"serve"`` for caches left
 behind by a turn served on this node, ``"prime"`` for caches installed by
 the migration warm-start hook (:meth:`repro.serving.engine.InferenceEngine.
 prime` — the replication-arrival path that pre-warms a keygroup peer before
-a roaming client's first turn lands there). See docs/architecture.md,
-"Migration warm-start", for the full request lifecycle.
+a roaming client's first turn lands there). A prime that *extends* an
+existing entry keeps that entry's provenance and LRU position: warm-start
+must never demote or relabel the node's own hot serve entries. See
+docs/architecture.md, "Migration warm-start", for the full request
+lifecycle.
+
+With an attached :class:`~repro.serving.paged_kv.PagedKVAllocator`
+(``allocator``), entries are stored *paged*: ``put`` pages a dense entry
+into pool-owned fixed-size pages (or adopts an already-paged entry's pages
+zero-copy — the batched server's write-back path), eviction is
+page-budgeted rather than entry-counted (``reclaim``), and hits are
+materialized back to a dense view on demand (``materialize``). An entry
+then costs ``ceil(tokens / page_size)`` pages instead of a full
+``max_len``-width lane — the many-tenant memory win (docs/architecture.md,
+"Paged session KV").
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:  # circular-import guard: paged_kv never imports us back
+    from .paged_kv import PagedKVAllocator
 
 
 def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
@@ -39,20 +55,27 @@ def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
 
 @dataclass
 class CacheEntry:
-    """KV state for the token prefix ``token_ids``; ``caches`` is the
-    models-layer cache pytree with kv_pos trimmed to ``pos``. ``source``
-    records how the entry got here: ``"serve"`` (left behind by a turn
-    served on this node) or ``"prime"`` (installed by the migration
-    warm-start hook on context-replication arrival)."""
+    """KV state for the token prefix ``token_ids``. Exactly one of two
+    storage forms is live: ``caches`` — the dense models-layer cache pytree
+    with kv_pos trimmed to ``pos`` — or ``pages`` — a list of physical page
+    ids in the owning pool's allocator (paged mode; the entry owns one ref
+    per page). ``source`` records how the entry got here: ``"serve"`` (left
+    behind by a turn served on this node) or ``"prime"`` (installed by the
+    migration warm-start hook on context-replication arrival)."""
 
     token_ids: List[int]
-    caches: List[Dict]
+    caches: Optional[List[Dict]] = None
     source: str = "serve"
+    pages: Optional[List[int]] = None
 
     @property
     def pos(self) -> int:
-        """Slots [0, pos) of `caches` hold exactly `token_ids`."""
+        """Slots [0, pos) of the stored KV hold exactly `token_ids`."""
         return len(self.token_ids)
+
+    @property
+    def paged(self) -> bool:
+        return self.pages is not None
 
 
 @dataclass
@@ -65,6 +88,8 @@ class SessionCachePool:
     evictions: int = 0
     invalidations: int = 0
     primes: int = 0  # warm-start installs/extensions via InferenceEngine.prime
+    rejects: int = 0  # paged inserts dropped for lack of page budget
+    allocator: Optional["PagedKVAllocator"] = None
     _entries: "OrderedDict[str, CacheEntry]" = field(
         default_factory=OrderedDict, repr=False
     )
@@ -84,7 +109,8 @@ class SessionCachePool:
         last-position logits. A *divergent* prefix (stale/edited history)
         invalidates the entry; incoming ids that are a strict prefix of the
         cached tokens (client retry/resend) still reuse — the caller must
-        trim kv_pos to ``usable`` whenever ``usable < entry.pos``."""
+        trim kv_pos to ``usable`` whenever ``usable < entry.pos`` (paged
+        entries: ``materialize(entry, usable, width)`` does both)."""
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
@@ -95,6 +121,7 @@ class SessionCachePool:
             # genuine divergence: the cache beyond lcp is for wrong tokens
             self.invalidations += 1
             self.misses += 1
+            self._release(entry)
             del self._entries[key]
             return None, 0
         usable = min(entry.pos, n - 1)
@@ -106,18 +133,62 @@ class SessionCachePool:
         return entry, usable
 
     def put(self, key: str, entry: CacheEntry, low_priority: bool = False) -> None:
-        """Insert/replace an entry. ``low_priority`` (the warm-start prime
-        path) inserts at the LRU end instead of the MRU end: a prime for a
-        session that *might* roam here must never evict this node's hot
-        serve entries — on a full pool the prime itself is the next victim,
-        and the serving working set stays intact. The first serving hit
-        promotes a kept prime to MRU like any other entry."""
+        """Insert/replace an entry. With an ``allocator``, a dense entry is
+        paged on the way in (an already-paged entry — the batched server's
+        finished-slot write-back — is adopted zero-copy: the pool takes over
+        its page refs).
+
+        ``low_priority`` (the warm-start prime path) is best-effort storage:
+        a *fresh* insert goes to the LRU end instead of the MRU end, and in
+        paged mode it never reclaims pages from other entries — a prime for
+        a session that *might* roam here must never evict or displace this
+        node's hot serve entries; on a full pool the prime is the next
+        victim (or is dropped outright when no pages are free). Updating a
+        key that already exists keeps its current LRU position: extending a
+        hot entry off the hot path must not demote it to eviction victim.
+        The first serving hit promotes a kept prime to MRU like any other
+        entry."""
         if self.capacity <= 0:
+            self._release(entry)  # adopted page refs must not leak
             return
+        if self.allocator is not None and not entry.paged:
+            assert entry.caches is not None
+            needed = self.allocator.pages_for(entry.pos)
+            if self.allocator.n_free < needed and not low_priority:
+                old = self._entries.get(key)
+                if old is not None and old.paged:
+                    # same-key replacement under pressure: the old prefix is
+                    # superseded by this fresher entry, so drop its pool
+                    # refs first — a growing session reuses its own pages
+                    # instead of evicting every other tenant (pages shared
+                    # with a live slot survive via the slot's refs; if the
+                    # store still fails the key is simply gone, counted in
+                    # rejects)
+                    self._release(old)
+                    del self._entries[key]
+                self.reclaim(needed, exclude=key)
+            pages = (
+                self.allocator.store(entry.caches, entry.pos)
+                if self.allocator.n_free >= needed else None
+            )
+            if pages is None:
+                self.rejects += 1
+                return  # best effort: the existing entry (if any) stays
+            entry = CacheEntry(
+                token_ids=entry.token_ids, source=entry.source, pages=pages
+            )
+        old = self._entries.get(key)
+        existed = old is not None
         self._entries[key] = entry
-        self._entries.move_to_end(key, last=not low_priority)
+        if existed and old is not entry:
+            self._release(old)
+        if not existed:
+            self._entries.move_to_end(key, last=not low_priority)
+        elif not low_priority:
+            self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            _, victim = self._entries.popitem(last=False)
+            self._release(victim)
             self.evictions += 1
 
     def peek(self, key: str) -> Optional[CacheEntry]:
@@ -128,13 +199,62 @@ class SessionCachePool:
         return self._entries.get(key)
 
     def invalidate(self, key: str) -> None:
-        self._entries.pop(key, None)
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self._release(entry)
 
     def clear(self) -> None:
+        for entry in self._entries.values():
+            self._release(entry)
         self._entries.clear()
 
+    # -- paged storage --------------------------------------------------
+    def _release(self, entry: CacheEntry) -> None:
+        """Drop the pool's ownership of an entry's storage (paged entries:
+        one page ref each; shared pages survive while a slot still holds
+        them)."""
+        if entry.paged and self.allocator is not None:
+            self.allocator.decref(entry.pages)
+            entry.pages = None
+
+    def reclaim(self, n_pages: int, exclude: Optional[str] = None) -> bool:
+        """Page-budgeted eviction: pop LRU entries (never ``exclude``) until
+        the allocator has ``n_pages`` free or nothing evictable remains.
+        Freed counts may lag when a live slot still shares an evicted
+        entry's pages — those pages return to the free list when the slot
+        releases them."""
+        if self.allocator is None:
+            return True
+        while self.allocator.n_free < n_pages:
+            victim_key = next(
+                (k for k in self._entries if k != exclude), None
+            )
+            if victim_key is None:
+                return False
+            self._release(self._entries.pop(victim_key))
+            self.evictions += 1
+        return True
+
+    def materialize(self, entry: CacheEntry, n_valid: int, width: int) -> List[Dict]:
+        """Dense B=1 cache view of a paged entry with kv_pos valid on
+        [0, n_valid) — fresh buffers (safe for donating compute paths).
+        Dense entries are returned as-is when no trim is needed."""
+        assert entry.paged and self.allocator is not None
+        return self.allocator.gather(entry.pages, n_valid, width)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages referenced by pool entries (a shared page counts once per
+        holding entry; compare against allocator.used_pages only when the
+        pool is the allocator's sole client)."""
+        if self.allocator is None:
+            return 0
+        return sum(
+            len(e.pages) for e in self._entries.values() if e.paged
+        )
+
     def stats(self) -> Dict[str, int]:
-        return {
+        s = {
             "entries": len(self._entries),
             "hits": self.hits,
             "misses": self.misses,
@@ -142,3 +262,8 @@ class SessionCachePool:
             "invalidations": self.invalidations,
             "primes": self.primes,
         }
+        if self.allocator is not None:
+            s["rejects"] = self.rejects
+            s["pages_in_use"] = self.pages_in_use
+            s["free_pages"] = self.allocator.n_free
+        return s

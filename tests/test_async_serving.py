@@ -321,6 +321,33 @@ def test_batched_service_session_kv_reuse_second_turn(tiny_cfg):
             second.n_context_tokens
 
 
+def test_overlong_context_on_async_path_truncates(tiny_cfg):
+    """Regression: a context longer than the server's cache submitted via
+    the async BatchedLLMService.submit path must degrade by truncation
+    (oldest tokens dropped, budget capped) — the same behavior as the
+    blocking shim — instead of tripping BatchedServer._insert_slot's
+    capacity assert and killing the node service. Runs the paged server so
+    truncation and page admission are exercised together."""
+    from repro.serving import BatchedLLMService
+
+    service = BatchedLLMService.create(
+        "tiny-batched", tiny_cfg, n_slots=2, max_len=96,
+        paged=True, page_size=16,
+    )
+    cluster = EdgeCluster.build(["a"], lambda nid: service)
+    client = LLMClient(cluster, model="tiny-batched", max_new_tokens=6)
+    long_prompt = "a very long rambling context about robots " * 40
+    ticket = client.submit(long_prompt, "a")
+    cluster.run_until_quiet()
+    r = ticket.response
+    assert r.error is None
+    assert 1 <= r.n_generated_tokens <= 6
+    # a second, normal-sized turn on the same node still serves fine
+    t2 = client.submit("short follow-up", "a")
+    cluster.run_until_quiet()
+    assert t2.response.error is None
+
+
 def test_batched_service_prime_warm_start(tiny_cfg):
     """BatchedServer.prime pre-warms the pool so a roaming session's first
     batched turn reuses the replicated context's KV (kv_warm_start)."""

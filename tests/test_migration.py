@@ -75,13 +75,28 @@ def test_roam_without_warm_start_is_cold():
 
 def test_roam_back_is_warm_via_delta_prime():
     """Roaming back to A after a turn on B: B's write replicated to A and
-    extended A's stale entry (delta prime), so A's turn is warm too."""
+    delta-extended A's entry, so A's turn prefills only the prompt. The
+    extended entry keeps its "serve" provenance — most of the reused prefix
+    was served on A itself, so the turn must NOT count as a migration warm
+    start (kv_warm_start inflation regression)."""
     cluster = _echo_cluster("eager")
     resps = _roam(cluster, ["a", "a", "b", "a"])
     t4 = resps[3].timing
-    assert t4.migrated and t4.kv_cache_hit and t4.kv_warm_start
+    assert t4.migrated and t4.kv_cache_hit
+    assert not t4.kv_warm_start  # provenance preserved on delta-extension
     assert t4.prefill_tokens == resps[3].n_prompt_tokens
     assert cluster.node("a").warm_starts >= 1
+
+
+def test_fresh_prime_still_counts_warm_start_after_extension():
+    """The provenance fix must not swallow genuine warm starts: a first
+    roam onto a node whose entry was installed (and later extended) by
+    primes alone still reports kv_warm_start."""
+    cluster = _echo_cluster("eager")
+    resps = _roam(cluster, ["a", "a", "b"])
+    t3 = resps[2].timing
+    # b's entry came from primes only (turn-1 install + turn-2 extension)
+    assert t3.migrated and t3.kv_cache_hit and t3.kv_warm_start
 
 
 def test_warm_start_cheaper_than_cold_on_analytic_clock():
@@ -134,6 +149,35 @@ def test_stale_delivery_does_not_notify():
     )
     assert cluster.warm_starts() == before
     assert store.dropped_stale_applies == stale_before  # direct apply path
+
+
+def test_low_priority_update_keeps_lru_position():
+    """Regression: a prime that delta-extends a key already hot in the pool
+    must keep that key's LRU position. The old behavior moved the updated
+    key to the LRU end, making the node's own hot session the next eviction
+    victim right after its context replicated back."""
+    pool = SessionCachePool(capacity=2)
+    pool.put("other", CacheEntry([3, 4], []))
+    pool.put("hot", CacheEntry([1, 2], []))       # MRU
+    # replication-arrival prime extends the hot serve entry off the hot path
+    pool.put("hot", CacheEntry([1, 2, 5], []), low_priority=True)
+    pool.put("new", CacheEntry([7, 8], []))       # evicts LRU
+    assert "hot" in pool and "other" not in pool  # hot entry kept its rank
+    # a normal (serving) put still promotes to MRU
+    pool.put("new", CacheEntry([7, 8, 9], []))
+    pool.put("x", CacheEntry([5], []))
+    assert "new" in pool and "hot" not in pool
+
+
+def test_prime_extension_preserves_serve_provenance_in_pool():
+    """Regression companion to the Timing-counter tests above, at the pool
+    level: extending a "serve" entry via a low-priority put keeps whatever
+    source the caller passes — the prime paths pass the original."""
+    pool = SessionCachePool(capacity=2)
+    pool.put("s", CacheEntry([1, 2], [], source="serve"))
+    pool.put("s", CacheEntry([1, 2, 3], [], source="serve"), low_priority=True)
+    assert pool.peek("s").source == "serve"
+    assert pool.peek("s").pos == 3
 
 
 def test_low_priority_prime_never_evicts_serve_entries():
@@ -230,6 +274,29 @@ def test_engine_prime_then_generate_suffix_only(jax_cfg):
     assert svc.prime("k", edited)
     r3 = svc.completion(edited, p, 8, cache_key="k")
     assert r3.cache_hit and r3.warm_start and r3.reused_tokens == len(edited)
+
+
+@pytest.mark.slow
+def test_prime_extension_of_serve_entry_not_warm(jax_cfg):
+    """Regression (Timing counters): a turn served here leaves a "serve"
+    entry; when its own context replicates back extended, the prime
+    delta-extends it but must keep the provenance — the next local hit is
+    NOT a migration warm start."""
+    svc = JaxLLMService.create("mig-mini", jax_cfg, max_len=512)
+    tok = svc.tokenizer
+    p1 = tok.encode("first question about robots")
+    r1 = svc.completion([], p1, 8, cache_key="s")
+    assert svc.engine.session_pool.peek("s").source == "serve"
+
+    # replication echoes the served history back, extended with a peer turn
+    ctx = p1 + r1.token_ids
+    extended = ctx + tok.encode("a turn appended elsewhere")
+    assert svc.prime("s", extended)
+    assert svc.engine.session_pool.peek("s").source == "serve"
+
+    r2 = svc.completion(extended, tok.encode("next"), 8, cache_key="s")
+    assert r2.cache_hit and r2.reused_tokens == len(extended)
+    assert not r2.warm_start  # would have been True before the fix
 
 
 @pytest.mark.slow

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the session KV layer: SessionCachePool
+stats invariants (hits + misses == match calls, capacity bound, monotone
+counters) and PagedKVAllocator free-list/refcount accounting under random
+op sequences."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ModelConfig
+from repro.serving import CacheEntry, PagedKVAllocator, SessionCachePool
+from repro.serving.paged_kv import SCRATCH_PAGE
+
+_op = st.tuples(
+    st.sampled_from(["put", "put_low", "match", "peek", "invalidate"]),
+    st.integers(0, 3),
+    st.lists(st.integers(0, 5), min_size=1, max_size=6),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_op, max_size=40))
+def test_pool_stats_invariants(ops):
+    """hits + misses == match calls; entry count bounded by capacity;
+    eviction/invalidation counters only grow; peek never perturbs stats."""
+    pool = SessionCachePool(capacity=3)
+    match_calls = 0
+    for op, ki, ids in ops:
+        key = f"k{ki}"
+        before = (pool.hits, pool.misses, pool.evictions, pool.invalidations)
+        if op == "put":
+            pool.put(key, CacheEntry(list(ids), []))
+        elif op == "put_low":
+            pool.put(key, CacheEntry(list(ids), [], source="prime"),
+                     low_priority=True)
+        elif op == "match":
+            match_calls += 1
+            entry, usable = pool.match(key, list(ids))
+            assert (entry is None) == (usable == 0)
+            if entry is not None:
+                assert 0 < usable <= min(entry.pos, len(ids))
+        elif op == "peek":
+            pool.peek(key)
+            assert (pool.hits, pool.misses, pool.evictions,
+                    pool.invalidations) == before
+        else:
+            pool.invalidate(key)
+        assert pool.hits + pool.misses == match_calls
+        assert len(pool) <= pool.capacity
+        assert pool.evictions >= before[2] and pool.invalidations >= before[3]
+
+
+_micro_cfg = ModelConfig(
+    name="micro", arch_type="dense", n_layers=1, d_model=16, n_heads=2,
+    n_kv_heads=1, d_ff=16, vocab_size=128, param_dtype="float32",
+    compute_dtype="float32",
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["alloc", "decref", "incref"]), st.integers(0, 6)),
+    max_size=30,
+))
+def test_allocator_accounting_invariants(ops):
+    """used + free == allocatable; a failed alloc leaves the free list
+    untouched; live pages are never the scratch page; used_pages counts
+    exactly the distinct live pages."""
+    alloc = PagedKVAllocator(_micro_cfg, page_size=4, n_pages=6)
+    held = []
+    for op, k in ops:
+        if op == "alloc":
+            got = alloc.alloc(k)
+            if got is not None:
+                held.extend(got)
+            else:
+                assert alloc.n_free < k  # only refused when short of pages
+        elif op == "decref" and held:
+            alloc.decref([held.pop(k % len(held))])
+        elif op == "incref" and held:
+            p = held[k % len(held)]
+            alloc.incref([p])
+            held.append(p)
+        assert alloc.used_pages + alloc.n_free == alloc.n_pages - 1
+        assert SCRATCH_PAGE not in held
+        assert all(alloc.refcount(p) >= 1 for p in set(held))
+        assert alloc.used_pages == len(set(held))
