@@ -18,8 +18,9 @@ def _time(fn, *args, iters: int = 3) -> float:
 
 
 def kernel_microbench(emit) -> None:
-    from repro.kernels.flash_attention import flash_attention, flash_attention_ref
     from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+    from repro.kernels.paged_attention import paged_attention
     from repro.kernels.ssd import ssd, ssd_sequential
 
     key = jax.random.key(0)
@@ -40,6 +41,17 @@ def kernel_microbench(emit) -> None:
     qpos = jnp.full((B, 1), S - 1, jnp.int32)
     us = _time(lambda: decode_attention(qd, k, v, qpos, pos, valid, block_k=64))
     emit("kernel_decode_attention_128", us, "interpret-mode")
+
+    # paged decode: the same 128-token session behind a page table
+    ps = 16
+    mp = S // ps
+    pool_k = k.reshape(mp, ps, KV, Dh)
+    pool_v = v.reshape(mp, ps, KV, Dh)
+    pool_k = jnp.concatenate([jnp.zeros_like(pool_k[:1]), pool_k])  # scratch p0
+    pool_v = jnp.concatenate([jnp.zeros_like(pool_v[:1]), pool_v])
+    table = jnp.arange(1, mp + 1, dtype=jnp.int32)[None, :]
+    us = _time(lambda: paged_attention(qd, pool_k, pool_v, table, qpos, pos))
+    emit("kernel_paged_attention_128", us, "interpret-mode")
 
     L, Hs, P, N = 128, 2, 32, 16
     ks = jax.random.split(key, 5)

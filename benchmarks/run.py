@@ -15,6 +15,7 @@ def main() -> None:
     from .concurrency_bench import concurrency_bench
     from .kernel_bench import kernel_microbench
     from .migration_bench import migration_bench
+    from .paged_attn_bench import paged_attn_bench
     from .paged_kv_bench import paged_kv_bench
     from .paper_figures import ALL_FIGURES
     from .roofline_table import roofline_table
@@ -30,7 +31,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     benches = ALL_FIGURES + [
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
-        concurrency_bench, paged_kv_bench,
+        concurrency_bench, paged_kv_bench, paged_attn_bench,
     ]
     for bench in benches:
         tag = bench.__name__

@@ -27,12 +27,17 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="page-table KV (block-granular shared pool) instead "
                          "of full-width per-slot caches")
+    ap.add_argument("--pallas", action="store_true",
+                    help="fused Pallas attention kernels (with --paged: "
+                         "decode attends through the page table; interpret "
+                         "mode on CPU, so slower here — Mosaic on TPU)")
     args = ap.parse_args()
 
     cfg = ModelConfig(
         name="mt-demo", arch_type="dense", n_layers=2, d_model=128,
         n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=8192,
         param_dtype="float32", compute_dtype="float32",
+        attn_impl="pallas" if args.pallas else "reference",
     )
     params = init_params(jax.random.key(0), cfg)
     tok = get_tokenizer(cfg.vocab_size, seed=0)

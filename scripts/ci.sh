@@ -17,6 +17,9 @@ python -m benchmarks.concurrency_bench --smoke
 echo "== smoke: paged session KV (tiny batched server, 4 tenants) =="
 python -m benchmarks.paged_kv_bench --smoke
 
+echo "== smoke: paged attention kernel (cost scales with actual kv_len) =="
+python -m benchmarks.paged_attn_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 

@@ -11,5 +11,7 @@ Each kernel ships three artifacts (per the repo convention):
                   (interpret=True on CPU; Mosaic on TPU).
 
 Kernels: flash_attention (prefill), decode_attention (flash-decode),
-ssd (Mamba2 intra-chunk state-space dual).
+paged_attention (flash-decode through a page table — the paged serving
+path's decode inner loop, no gather-materialize), ssd (Mamba2 intra-chunk
+state-space dual).
 """

@@ -1,0 +1,12 @@
+from . import ops, ref
+from .kernel import paged_attention_pallas
+from .ops import paged_attention
+from .ref import paged_attention_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "paged_attention",
+    "paged_attention_pallas",
+    "paged_attention_ref",
+]

@@ -1,0 +1,161 @@
+"""Fused paged-attention decode — one query token against a paged KV pool
+(Pallas TPU).
+
+The paged serving path (`serving/paged_kv.py`) stores each sequence as a
+*page table* over one shared physical pool, ``(P, page_size, KV, Dh)`` per
+layer. The gather-materialize fallback linearizes that table into a
+``(B, MP·page_size, KV, Dh)`` copy before attending — O(max_len) HBM
+traffic per token per lane, even for a 40-token session. This kernel
+attends *through* the table instead (vLLM-style paged attention): the page
+table and per-lane page bounds are scalar-prefetch operands, so the K/V
+``BlockSpec`` index maps dereference ``table[b, p]`` directly and each grid
+step DMAs one physical page from the pool into VMEM — no linearized copy
+ever exists.
+
+Grid: ``(batch, kv_heads, MP)`` — page-blocks innermost. Online softmax
+carries ``(m, l, acc)`` in VMEM scratch across the page dimension exactly
+like the dense flash-decode kernel; all G query heads of one KV head share
+each page load (GQA grouping). Two raggedness levers keep the cost
+proportional to *actual* tokens:
+
+- steps with ``p >= bound[b]`` (``bound = ceil(kv_len / page_size)``) skip
+  all compute via ``pl.when``, and their index maps clamp to the lane's
+  last real page — consecutive grid steps that map to the same block are
+  not re-fetched, so inactive tail pages and the scratch page are never
+  touched for an active lane;
+- the wrapper (ops.py) can additionally trim the table width itself
+  (``max_pages``) when the caller knows a tighter static bound.
+
+Masking is positional (``0 <= kv_pos <= q_pos``, optional sliding window,
+optional logit softcap), identical to the dense decode kernel, with one
+deliberate difference: rows with *no* valid key (an empty lane) produce
+exact zeros rather than a uniform average over whatever the grid happened
+to visit — the fallback's output for such rows is garbage-by-design and
+unread, and zeros are the only bound-independent answer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    table_ref, bound_ref, qpos_ref,     # scalar prefetch (SMEM)
+    kvpos_ref, q_ref, k_ref, v_ref,     # tensor blocks
+    o_ref,
+    acc_ref, m_ref, l_ref,              # VMEM scratch (persist over ip)
+    *, n_pb: int, window: int, softcap: float, scale: float,
+):
+    bi = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(ip < bound_ref[bi])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (ps, Dh) — one page
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (G, ps)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+
+        qp = qpos_ref[bi]
+        kp = kvpos_ref[0, 0, :]                         # (ps,)
+        mask = (kp >= 0) & (kp <= qp)
+        if window > 0:
+            mask = mask & (qp - kp < window)
+        logits = jnp.where(mask[None, :], logits, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # p is zeroed on masked slots (not just NEG_INF logits) so a fully
+        # masked lane accumulates l == 0 and finalizes to exact zeros
+        # independent of how many pages the grid visited for it.
+        p = jnp.exp(logits - m_new) * mask[None, :].astype(jnp.float32)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ip == n_pb - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,           # (B, KV, G, Dh) — reshaped + rope'd by ops.py
+    pool_k: jnp.ndarray,      # (P, page_size, KV, Dh) — shared pool, one layer
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP) int32 physical page ids per lane
+    page_bound: jnp.ndarray,  # (B,) int32 — ceil(kv_len / ps), in [1, MP]
+    q_pos: jnp.ndarray,       # (B,) int32 absolute position of the query
+    kv_pos: jnp.ndarray,      # (B, MP, page_size) int32, -1 = empty slot
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, kvh, g, dh = q.shape
+    ps = pool_k.shape[1]
+    mp = page_table.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+
+    def page_map(bi, hi, ip, table, bound, qpos):
+        # beyond-bound steps re-map to the lane's last real page: the block
+        # index repeats, so the pipeline skips the DMA and the scratch page
+        # (table padding) is never dereferenced for an active lane
+        return (table[bi, jnp.minimum(ip, bound[bi] - 1)], 0, hi, 0)
+
+    def kvpos_map(bi, hi, ip, table, bound, qpos):
+        return (bi, jnp.minimum(ip, bound[bi] - 1), 0)
+
+    def lane_map(bi, hi, ip, table, bound, qpos):
+        return (bi, hi, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, ps), kvpos_map),
+            pl.BlockSpec((1, 1, g, dh), lane_map),
+            pl.BlockSpec((1, ps, 1, dh), page_map),
+            pl.BlockSpec((1, ps, 1, dh), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lane_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _paged_decode_kernel, n_pb=mp, window=window, softcap=softcap, scale=scale
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32), page_bound.astype(jnp.int32),
+        q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), q, pool_k, pool_v,
+    )

@@ -1,0 +1,65 @@
+"""Jit'd wrapper for paged decode attention: reshapes GQA heads, derives
+per-lane page bounds from the query position, optionally trims the table
+width to a static cap."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_pallas
+from .ref import paged_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "max_pages", "interpret")
+)
+def paged_attention(
+    q,            # (B, 1, H, Dh) — rope'd query token
+    pool_k,       # (P, page_size, KV, Dh) — shared physical pool, one layer
+    pool_v,
+    page_table,   # (B, MP) physical page ids per lane
+    q_pos,        # (B, 1) absolute position of the query token
+    kv_pos,       # (B, MP*page_size) absolute positions per virtual slot
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    max_pages: Optional[int] = None,
+    interpret: bool = None,
+):
+    """q vs a paged KV pool -> (B, 1, H, Dh), attending through the table.
+
+    The per-lane page bound ``ceil((q_pos + 1) / page_size)`` relies on the
+    layout invariant of the paged pool (slot index == absolute position for
+    valid slots), under which no key beyond the query's own page can pass
+    the causal mask. ``max_pages`` additionally trims the *static* table
+    width when the caller knows every lane's bound — e.g. the batched
+    server's page-width bucketing — which shrinks the kernel grid itself.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, _, h, dh = q.shape
+    ps = pool_k.shape[1]
+    kvh = pool_k.shape[2]
+    g = h // kvh
+    mp = page_table.shape[1]
+    if max_pages is not None and max_pages < mp:
+        mp = max(1, max_pages)
+        page_table = page_table[:, :mp]
+        kv_pos = kv_pos[:, : mp * ps]
+    qp = q_pos.reshape(b).astype(jnp.int32)
+    bound = jnp.clip((qp + ps) // ps, 1, mp)   # ceil((qp+1)/ps), junk-safe
+    qr = q.reshape(b, kvh, g, dh)
+    out = paged_attention_pallas(
+        qr, pool_k, pool_v, page_table, bound, qp,
+        kv_pos.reshape(b, mp, ps),
+        window=window, softcap=softcap, interpret=interpret,
+    )
+    return out.reshape(b, 1, h, dh)

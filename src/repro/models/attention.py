@@ -129,6 +129,18 @@ def attention_forward(
     return out
 
 
+def _project_q_step(
+    p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Rope'd query for the current decode token: (B,1,D) -> (B,1,H,Dh)."""
+    b = x.shape[0]
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+    return apply_rope(cfg, q, positions)
+
+
 def attention_decode(
     p: Params,
     x: jnp.ndarray,              # (B,1,D) — the single new token
@@ -143,11 +155,7 @@ def attention_decode(
     """Single-step decode against a KV cache (full or ring)."""
     pos1d = positions[0] if positions.ndim == 3 else positions
     b = x.shape[0]
-    q = x @ p["wq"]
-    if cfg.qkv_bias:
-        q = q + p["bq"]
-    q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
-    q = apply_rope(cfg, q, positions)
+    q = _project_q_step(p, x, positions, cfg)
     if cfg.attn_impl == "pallas":
         from ..kernels.decode_attention import ops as decode_ops
 
@@ -171,17 +179,42 @@ def attention_decode_paged(
     kv_pos: jnp.ndarray,         # (B, MP*ps) absolute positions per virtual slot
     cfg: ModelConfig,
     window: int = 0,
+    lin_k: Optional[jnp.ndarray] = None,  # (B, MP*ps, KV, Dh) pre-gathered view
+    lin_v: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Page-table-aware decode: gather each lane's pages into the linear
-    full-cache view (slot == absolute position) and run the standard
-    position-masked decode attention. The gathered view is transient — the
-    resident state between steps is the shared pool plus the tiny tables —
-    and is bit-identical to the full-width cache layout, so greedy decode
-    matches the unpaged path exactly."""
+    """Page-table-aware decode, two execution paths:
+
+    - ``pallas`` — the fused paged-attention kernel attends *through* the
+      page table (``repro.kernels.paged_attention``): K/V pages are loaded
+      straight from the shared pool via scalar-prefetched table indices, so
+      per-step HBM traffic is O(actual kv_len), and no linearized copy of
+      the cache ever exists.
+    - ``reference`` — gather each lane's pages into the linear full-cache
+      view (slot == absolute position) and run the standard position-masked
+      decode attention. Callers that already hold that view (the hoisted
+      once-per-step gather in :func:`~repro.models.transformer.
+      decode_step_paged`) pass it as ``lin_k``/``lin_v``; otherwise it is
+      gathered here, per layer. The gathered view is transient and
+      bit-identical to the full-width cache layout, so greedy decode
+      matches the unpaged path exactly.
+    """
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    if cfg.attn_impl == "pallas":
+        from ..kernels.paged_attention import ops as paged_ops
+
+        b = x.shape[0]
+        q = _project_q_step(p, x, positions, cfg)
+        out = paged_ops.paged_attention(
+            q, pool_k, pool_v, page_table, pos1d, kv_pos,
+            window=window, softcap=cfg.attn_softcap,
+        )
+        out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
+        return out @ p["wo"]
+
     from .cache import gather_pages
 
-    ck = gather_pages(pool_k, page_table)
-    cv = gather_pages(pool_v, page_table)
+    ck = lin_k if lin_k is not None else gather_pages(pool_k, page_table)
+    cv = lin_v if lin_v is not None else gather_pages(pool_v, page_table)
     return attention_decode(
         p, x, positions, ck, cv, kv_pos, kv_pos >= 0, cfg, window=window
     )

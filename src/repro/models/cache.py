@@ -155,16 +155,47 @@ def paged_write_step(
     """Scatter one decode token's K/V into its (page, offset) cell. The
     owner guarantees each active lane's current tail page is exclusively
     held (fresh tail-page swap at admission), so cross-lane collisions cannot
-    occur; inactive lanes point at the scratch page."""
+    occur; inactive lanes point at the scratch page.
+
+    A lane whose position has run past the table (``pos >= MP * ps``) gets
+    its write *dropped* — an out-of-range sentinel page id plus
+    ``mode="drop"`` — rather than clamped into the last page, which would
+    silently overwrite resident KV of the token actually living in that
+    cell (tests/test_paged_kv.py::test_paged_write_step_drops_at_capacity)."""
     b = pos.shape[0]
     bidx = jnp.arange(b)
     mp = page_table.shape[1]
-    page_idx = jnp.minimum(pos // page_size, mp - 1)
-    phys = page_table[bidx, page_idx]
+    n_pages = pool_k.shape[0]
+    page_idx = pos // page_size
+    phys = page_table[bidx, jnp.minimum(page_idx, mp - 1)]
+    phys = jnp.where(page_idx < mp, phys, n_pages)   # OOB sentinel -> dropped
     slot = pos % page_size
-    pk = pool_k.at[phys, slot].set(k_new[:, 0])
-    pv = pool_v.at[phys, slot].set(v_new[:, 0])
+    pk = pool_k.at[phys, slot].set(k_new[:, 0], mode="drop")
+    pv = pool_v.at[phys, slot].set(v_new[:, 0], mode="drop")
     return pk, pv
+
+
+def gather_pages_stacked(
+    pool_k: jnp.ndarray,      # (L, P, ps, KV, Dh) — a layer group's K pool
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Linearize an entire layer stack's K and V pools through the page
+    table — the hoisted form of :func:`gather_pages` for the reference
+    paged-decode path: one indexed load per pool per *step* (stacked over
+    the layer axis) instead of two per *layer* of the scan. K and V are
+    gathered separately rather than stacked into one take: concatenating
+    the pools first would materialize a transient copy of the entire
+    physical pool every step, which on a many-tenant node can exceed the
+    bytes the gather itself moves. Returns ``(k, v)`` of shape
+    (L, B, MP*ps, KV, Dh)."""
+    l, _, ps, kv, dh = pool_k.shape
+    b, mp = page_table.shape
+    flat = (l, b, mp * ps, kv, dh)
+    return (
+        pool_k[:, page_table].reshape(flat),    # (L, B, MP, ps, KV, Dh)
+        pool_v[:, page_table].reshape(flat),
+    )
 
 
 def trim_cache_prefix(caches, n_valid) -> list:

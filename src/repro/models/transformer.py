@@ -34,6 +34,7 @@ from .attention import (
 )
 from .cache import (
     Cache,
+    gather_pages_stacked,
     init_attn_cache,
     init_paged_pool,
     init_ssm_cache,
@@ -411,38 +412,56 @@ def _moe_block_decode(bp, x, positions, cache_k, cache_v, kv_pos, cfg, window, r
     return x + m, ck, cv
 
 
-def _dense_block_decode_paged(
-    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window, page_size
+def _paged_attn_sublayer(
+    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
+    page_size, lin_k, lin_v,
 ):
-    """One layer paged decode: scatter the token's K/V into its page cell,
-    then attend through the page table. pool_k/v: (P, ps, KV, Dh)."""
+    """Shared attention sublayer of one paged decode block: scatter the
+    token's K/V into its page cell, then attend through the page table
+    (fused kernel when ``cfg.attn_impl == "pallas"``). On the reference
+    path, callers that hoisted the gather pass the pre-gathered linear
+    views; the new token is inserted into them here (slot == position, with
+    the same at-capacity drop as the pool scatter) so they stay
+    bit-identical to gathering after the scatter."""
     pos1d = positions[0] if positions.ndim == 3 else positions
     h_in = rms_norm(x, bp["norm1"], cfg.norm_eps)
     k_new, v_new = project_kv_step(bp["attn"], h_in, positions, cfg)
     pk, pv = paged_write_step(
         pool_k, pool_v, k_new, v_new, pos1d[:, 0], page_table, page_size
     )
+    if lin_k is not None:
+        bidx = jnp.arange(x.shape[0])
+        slot = pos1d[:, 0]
+        lin_k = lin_k.at[bidx, slot].set(k_new[:, 0].astype(lin_k.dtype), mode="drop")
+        lin_v = lin_v.at[bidx, slot].set(v_new[:, 0].astype(lin_v.dtype), mode="drop")
     h = attention_decode_paged(
-        bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg, window=window
+        bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg,
+        window=window, lin_k=lin_k, lin_v=lin_v,
     )
-    x = x + h
+    return x + h, pk, pv
+
+
+def _dense_block_decode_paged(
+    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
+    page_size, lin_k=None, lin_v=None,
+):
+    """One layer paged decode. pool_k/v: (P, ps, KV, Dh)."""
+    x, pk, pv = _paged_attn_sublayer(
+        bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
+        page_size, lin_k, lin_v,
+    )
     x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
     return x, pk, pv
 
 
 def _moe_block_decode_paged(
-    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window, page_size
+    bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
+    page_size, lin_k=None, lin_v=None,
 ):
-    pos1d = positions[0] if positions.ndim == 3 else positions
-    h_in = rms_norm(x, bp["norm1"], cfg.norm_eps)
-    k_new, v_new = project_kv_step(bp["attn"], h_in, positions, cfg)
-    pk, pv = paged_write_step(
-        pool_k, pool_v, k_new, v_new, pos1d[:, 0], page_table, page_size
+    x, pk, pv = _paged_attn_sublayer(
+        bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
+        page_size, lin_k, lin_v,
     )
-    h = attention_decode_paged(
-        bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg, window=window
-    )
-    x = x + h
     m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
     return x + m, pk, pv
 
@@ -460,7 +479,18 @@ def decode_step_paged(
     is the shared page pool plus per-lane page tables sized to actual token
     counts, not B full-width lanes. Full-cache dense/moe groups only (the
     same family :func:`~repro.models.prefill.supports_append` covers).
-    Pure function; jit with donate_argnums on pools and kv_pos."""
+    Pure function; jit with donate_argnums on pools and kv_pos.
+
+    With ``cfg.attn_impl == "pallas"`` each layer attends straight through
+    the page table (``repro.kernels.paged_attention``) — no linearized
+    cache copy is ever built. The reference path gathers instead, hoisted:
+    one K and one V gather per group per *step* (``gather_pages_stacked``)
+    rather than two per layer, with the new token inserted into the view
+    inside each block. Callers may pass a ``page_table``/``kv_pos`` pair
+    trimmed to fewer pages than the lanes' full width (the batched server's
+    page-width bucketing): the layout invariant (slot == position) makes
+    attention over the trimmed width identical as long as every lane's
+    tokens fit in it."""
     b = tokens.shape[0]
     pos1 = pos[:, None].astype(jnp.int32)
     positions = (
@@ -468,7 +498,13 @@ def decode_step_paged(
     )
     x = embed_tokens(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
     page_size = pools[0]["k"].shape[2]
-    new_kv_pos = update_kv_pos(kv_pos, pos, False)
+    # drop-mode update: a lane at table capacity keeps its last slot intact
+    # instead of relabeling it with the overflow position (the K/V write is
+    # likewise dropped — see paged_write_step)
+    new_kv_pos = kv_pos.at[jnp.arange(b), pos].set(
+        pos.astype(jnp.int32), mode="drop"
+    )
+    use_kernel = cfg.attn_impl == "pallas"
 
     new_pools: List[Cache] = []
     for spec, gp, pool in zip(layer_groups(cfg), params["groups"], pools):
@@ -480,14 +516,29 @@ def decode_step_paged(
             else _moe_block_decode_paged
         )
 
-        def body(x, scanned, _fn=block_fn):
-            bp, pk, pv = scanned
-            x, nk, nv = _fn(
-                bp, x, positions, pk, pv, page_table, new_kv_pos, cfg, 0, page_size
-            )
-            return x, (nk, nv)
+        if use_kernel:
+            xs = (gp, pool["k"], pool["v"])
 
-        x, (nk, nv) = scan_or_unroll(body, x, (gp, pool["k"], pool["v"]), cfg)
+            def body(x, scanned, _fn=block_fn):
+                bp, pk, pv = scanned
+                x, nk, nv = _fn(
+                    bp, x, positions, pk, pv, page_table, new_kv_pos, cfg,
+                    0, page_size,
+                )
+                return x, (nk, nv)
+        else:
+            lin_k, lin_v = gather_pages_stacked(pool["k"], pool["v"], page_table)
+            xs = (gp, pool["k"], pool["v"], lin_k, lin_v)
+
+            def body(x, scanned, _fn=block_fn):
+                bp, pk, pv, lk, lv = scanned
+                x, nk, nv = _fn(
+                    bp, x, positions, pk, pv, page_table, new_kv_pos, cfg,
+                    0, page_size, lk, lv,
+                )
+                return x, (nk, nv)
+
+        x, (nk, nv) = scan_or_unroll(body, x, xs, cfg)
         new_pools.append({"k": nk, "v": nv})
 
     logits = unembed(params["embed"], x, cfg)

@@ -556,12 +556,38 @@ class BatchedServer:
             if not any(s is not None for s in self.slots):
                 return
             tokens = jnp.asarray(self._next_tok)[:, None]
-            logits, pools, kv_pos = self._decode_paged(
-                self.params, self.allocator.pools, jnp.asarray(self._table),
-                self._kv_pos, tokens, self._pos,
+            # page-width bucketing: run the jitted decode at the smallest
+            # power-of-two page width covering the longest *active* lane,
+            # not at max_len — the kernel's grid (pallas) or the gathered
+            # view (reference) then scales with what sessions actually
+            # hold. The layout invariant (slot == position) makes the
+            # trimmed attention identical: every active lane's tokens live
+            # in its own pages, all inside the trimmed width. At most
+            # log2(MP) decode shapes compile.
+            mp = self._table.shape[1]
+            need = max(
+                (len(self.slot_pages[i]) for i, s in enumerate(self.slots)
+                 if s is not None),
+                default=1,
             )
+            w = 1
+            while w < max(1, need):
+                w *= 2
+            w = min(w, mp)
+            if w < mp:
+                wp = w * ps
+                logits, pools, kvp = self._decode_paged(
+                    self.params, self.allocator.pools,
+                    jnp.asarray(self._table[:, :w]),
+                    self._kv_pos[:, :wp], tokens, self._pos,
+                )
+                self._kv_pos = self._kv_pos.at[:, :wp].set(kvp)
+            else:
+                logits, pools, self._kv_pos = self._decode_paged(
+                    self.params, self.allocator.pools, jnp.asarray(self._table),
+                    self._kv_pos, tokens, self._pos,
+                )
             self.allocator.pools = pools
-            self._kv_pos = kv_pos
         else:
             tokens = jnp.asarray(self._next_tok)[:, None]
             logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)

@@ -1,0 +1,69 @@
+"""Hypothesis property sweeps for the Pallas kernels, split out of
+test_kernels.py so the deterministic sweeps there still run where
+hypothesis isn't installed (it is a requirements-dev.txt extra)."""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.ssd import ssd, ssd_sequential
+
+from test_kernels import _attn_inputs, _paged_inputs, _ssd_inputs
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(8, 40),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    dh=st.sampled_from([16, 32]),
+    window=st.integers(0, 24),
+)
+def test_flash_property(s, h, g, dh, window):
+    kv = max(1, h // g)
+    args = _attn_inputs(jax.random.key(3), 1, s, s, h, kv, dh)
+    out = flash_attention(*args, window=window, block_q=8, block_k=8)
+    ref = flash_attention_ref(*args, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ps=st.sampled_from([8, 16, 64]),
+    h=st.sampled_from([2, 4, 8]),
+    g=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32]),
+    window=st.integers(0, 40),
+    seed=st.integers(0, 50),
+)
+def test_paged_property(ps, h, g, dh, window, seed):
+    """Random ragged lane lengths (incl. empty and page-boundary) x page
+    sizes x GQA groupings x windows against the gather oracle."""
+    kv = max(1, h // g)
+    rng = np.random.default_rng(seed)
+    lens = tuple(int(x) for x in rng.choice([0, 1, ps - 1, ps, ps + 1, 3 * ps], 3))
+    args = _paged_inputs(jax.random.key(seed), lens, ps, h, kv, dh)
+    out = paged_attention(*args, window=window)
+    ref = paged_attention_ref(*args, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.sampled_from([16, 32, 48]),
+    chunk=st.sampled_from([4, 8, 16]),
+    h=st.integers(1, 3),
+    seed=st.integers(0, 100),
+)
+def test_ssd_property(l, chunk, h, seed):
+    x, dt, A, Bv, Cv = _ssd_inputs(jax.random.key(seed), 1, l, h, 8, 4)
+    y_seq, f_seq = ssd_sequential(x, dt, A, Bv, Cv)
+    y_k, f_k = ssd(x, dt, A, Bv, Cv, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_seq), rtol=2e-4, atol=2e-4)

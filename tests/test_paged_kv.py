@@ -127,6 +127,51 @@ def test_decode_step_paged_matches_dense(cfg, params):
         assert jnp.array_equal(tok_d, tok_p)
 
 
+def test_paged_write_step_drops_at_capacity(cfg, params):
+    """Regression: a lane whose position reaches table capacity (exactly
+    mp * page_size tokens) used to have its write *clamped* into the last
+    page — silently overwriting the resident K/V of the token actually
+    stored in that cell. The out-of-range write must be dropped instead."""
+    from repro.models.cache import paged_write_step
+
+    ps, mp, n_pages = 4, 3, 8
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    key = jax.random.key(1)
+    pool_k = jax.random.normal(key, (n_pages, ps, kv, dh))
+    pool_v = pool_k + 1.0
+    table = jnp.asarray([[1, 2, 3]], jnp.int32)            # full lane: 3 pages
+    k_new = jnp.ones((1, 1, kv, dh))
+    v_new = jnp.ones((1, 1, kv, dh))
+
+    # control: the last in-range position lands in the last page's tail cell
+    pos = jnp.asarray([mp * ps - 1], jnp.int32)
+    pk, pv = paged_write_step(pool_k, pool_v, k_new, v_new, pos, table, ps)
+    assert jnp.array_equal(pk[3, ps - 1], k_new[0, 0])
+
+    # at capacity: the write is dropped, resident KV is untouched
+    pos = jnp.asarray([mp * ps], jnp.int32)
+    pk, pv = paged_write_step(pool_k, pool_v, k_new, v_new, pos, table, ps)
+    assert jnp.array_equal(pk, pool_k) and jnp.array_equal(pv, pool_v)
+
+
+def test_decode_step_paged_kv_pos_drops_at_capacity(cfg, params):
+    """The position table must drop the at-capacity update too: relabeling
+    the last slot with the overflow position would mark a stale K/V cell
+    causal for the current query."""
+    width = 8
+    kv_pos = jnp.asarray([[0, 1, 2, 3, 4, 5, 6, 7]], jnp.int32)
+    from repro.serving import PagedKVAllocator
+
+    alloc = PagedKVAllocator(cfg, page_size=4, n_pages=4)
+    pages = alloc.alloc(2)
+    table = jnp.asarray(alloc.table_for(pages, width))[None, :]
+    tok = jnp.zeros((1, 1), jnp.int32)
+    _, _, new_kv_pos = decode_step_paged(
+        params, cfg, alloc.pools, table, kv_pos, tok, jnp.asarray([width], jnp.int32)
+    )
+    assert jnp.array_equal(new_kv_pos, kv_pos)
+
+
 # ---------------------------------------------------------------------------
 # Pool page accounting (deterministic; the pool is the sole allocator client)
 # ---------------------------------------------------------------------------
@@ -466,6 +511,43 @@ def test_paged_doubles_resident_sessions_in_same_budget(cfg, params, tok):
     assert len(paged.session_pool) == n_tenants
     assert paged.allocator.resident_kv_bytes <= paged.allocator.total_kv_bytes
     assert len(full.session_pool) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Fused paged-attention kernel on the serving path
+# ---------------------------------------------------------------------------
+
+def test_pallas_paged_server_greedy_equivalent(cfg, params, tok):
+    """End-to-end equivalence of the decode inner loop's two executions:
+    a paged BatchedServer with ``attn_impl="pallas"`` (fused kernel
+    attending through the page table, interpret mode on CPU) must emit
+    greedy tokens identical to the paged gather-reference server —
+    including multi-turn page reuse, where admission increfs shared prefix
+    pages and the kernel reads them in place."""
+    servers = {}
+    for impl in ("reference", "pallas"):
+        servers[impl] = BatchedServer(
+            cfg.replace(attn_impl=impl), params, n_slots=2, max_len=128,
+            session_pool=SessionCachePool(capacity=4),
+            paged=True, page_size=16,
+        )
+    reqs = [tok.encode(f"request {i} about the lidar rig") for i in range(3)]
+    outs = {}
+    for impl, srv in servers.items():
+        rids = [srv.submit(r, max_new=6) for r in reqs]
+        fin = {f.request_id: f.token_ids for f in srv.run_to_completion()}
+        outs[impl] = [fin[r] for r in rids]
+        srv.finished.clear()
+    assert outs["reference"] == outs["pallas"]
+
+    ctx = []
+    for turn in range(2):
+        ids = ctx + tok.encode(f"turn {turn}: what changed?")
+        fins = {impl: _run(srv, ids, key="kq") for impl, srv in servers.items()}
+        assert fins["reference"].token_ids == fins["pallas"].token_ids
+        assert fins["reference"].reused_tokens == fins["pallas"].reused_tokens
+        assert fins["reference"].cache_hit == fins["pallas"].cache_hit == (turn > 0)
+        ctx = ids + fins["reference"].token_ids
 
 
 # ---------------------------------------------------------------------------
