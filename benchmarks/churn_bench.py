@@ -1,0 +1,271 @@
+"""Node-churn benchmark: roaming tenants under crashes, partitions, and
+message loss (docs/architecture.md, "Failure model").
+
+Runs N tenants roaming a 3-node edge cluster through the submit/await path
+while a seeded :class:`~repro.store.FaultPlan` injects a partition window,
+background message loss, and a degraded link, and scheduled events crash
+and restart nodes mid-run (>= 2 crash/restart cycles in the full run).
+Clients use per-attempt timeouts and keygroup failover; most run STRONG,
+some AVAILABLE.
+
+Reported (BENCH_churn.json): turn success rate, explicit-failure breakdown
+(node-down vs protocol), p50/p99 client-observable latency over successful
+turns, failover/timeout/retry/drop counters, stale serves, and post-run
+convergence.
+
+Acceptance:
+- every ticket resolves — zero hung turns;
+- zero silent stale serves under STRONG (stale responses only ever carry
+  the AVAILABLE policy's explicit ``stale`` flag);
+- after restarting all nodes and draining, every replica of the keygroup
+  is identical (``EdgeCluster.converged()``) and the outbox is empty —
+  the durable outbox + anti-entropy caught everyone up despite the churn.
+
+    PYTHONPATH=src python -m benchmarks.churn_bench          # full
+    PYTHONPATH=src python -m benchmarks.churn_bench --smoke  # CI gate
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+NODES = ("n0", "n1", "n2")
+THINK_MS = 400.0
+TIMEOUT_MS = 30_000.0
+MAX_NEW = 12
+
+
+def _build(plan):
+    from repro.edge import EchoLLMService, EdgeCluster
+    from repro.store import Link
+
+    cluster = EdgeCluster.build(
+        list(NODES),
+        lambda nid: EchoLLMService(
+            model="m", vocab_size=32000, kv_reuse=True, n_slots=4,
+            tokenize_scale=0.0,
+        ),
+        inter_node_link=Link(latency_ms=3.0, bandwidth_mbps=100.0),
+        client_link=Link(latency_ms=2.0, bandwidth_mbps=200.0),
+    )
+    cluster.install_faults(plan)
+    return cluster
+
+
+def _percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return float(sorted_vals[i])
+
+
+def run_churn(n_tenants, turns_per_tenant, plan, churn_events):
+    """One churn run. ``churn_events`` is a list of (t_ms, kind, node) with
+    kind in {"crash", "crash_lose_replica", "restart"}. Returns the metrics
+    dict; every acceptance assert lives here so --smoke exercises the same
+    contract as the full run."""
+    from repro.core import ConsistencyPolicy
+    from repro.edge import LLMClient
+
+    cluster = _build(plan)
+    net = cluster.network
+
+    for t_ms, kind, node in churn_events:
+        if kind == "crash":
+            net.schedule(t_ms, lambda n=node: cluster.crash(n))
+        elif kind == "crash_lose_replica":
+            net.schedule(t_ms, lambda n=node: cluster.crash(n, lose_replica=True))
+        elif kind == "restart":
+            net.schedule(t_ms, lambda n=node: cluster.restart(n))
+        else:
+            raise ValueError(kind)
+
+    clients, traces = [], []
+    for i in range(n_tenants):
+        policy = (
+            ConsistencyPolicy.AVAILABLE if i % 4 == 3
+            else ConsistencyPolicy.STRONG
+        )
+        c = LLMClient(
+            cluster, model="m", policy=policy, max_new_tokens=MAX_NEW,
+            timeout_ms=TIMEOUT_MS, failover_backoff_ms=15.0,
+        )
+        clients.append(c)
+        traces.append(c.run_session(
+            [
+                (f"tenant {i} turn {t} about maps and sensors",
+                 NODES[(i + t) % len(NODES)])
+                for t in range(turns_per_tenant)
+            ],
+            think_ms=THINK_MS,
+            continue_on_error=True,   # an explicit failure must not strand
+        ))                            # the rest of the conversation
+    cluster.run_until_quiet()
+
+    # -- no hung turns: every session finished, every ticket resolved ------
+    assert all(tr.done for tr in traces)
+    tickets = [t for tr in traces for t in tr.tickets]
+    assert all(t.done for t in tickets)
+    expected = n_tenants * turns_per_tenant
+    assert len(tickets) == expected, (len(tickets), expected)
+
+    ok = [t for t in tickets if t.response.error is None]
+    node_down = [
+        t for t in tickets
+        if t.response.error is not None
+        and t.response.error.startswith("node-down")
+    ]
+    protocol = [
+        t for t in tickets
+        if t.response.error is not None and t not in node_down
+    ]
+
+    # -- zero silent stale serves under STRONG -----------------------------
+    strong_ids = {
+        id(t) for c, tr in zip(clients, traces)
+        if c.policy is ConsistencyPolicy.STRONG for t in tr.tickets
+    }
+    strong_stale = [t for t in ok if id(t) in strong_ids and t.response.stale]
+    assert not strong_stale, "STRONG must never silently serve stale context"
+    stale_served = sum(1 for t in ok if t.response.stale)
+
+    # -- post-run convergence: restart everything, drain, compare ----------
+    for nid in NODES:
+        if not cluster.node(nid).alive:
+            cluster.restart(nid)
+    cluster.converge()
+    assert cluster.converged(), "replicas diverged after churn"
+    assert cluster.store.outbox_size() == 0, "outbox not drained"
+
+    lat = sorted(t.latency_ms for t in ok)
+    return {
+        "tenants": n_tenants,
+        "turns_per_tenant": turns_per_tenant,
+        "turns_total": expected,
+        "turns_ok": len(ok),
+        "success_rate": len(ok) / expected,
+        "failed_node_down": len(node_down),
+        "failed_protocol": len(protocol),
+        "p50_latency_ms": _percentile(lat, 0.50),
+        "p99_latency_ms": _percentile(lat, 0.99),
+        "failovers": sum(c.failovers for c in clients),
+        "timeouts": sum(c.timeouts for c in clients),
+        "late_responses": sum(c.late_responses for c in clients),
+        "stale_served_available": stale_served,
+        "silent_stale_strong": len(strong_stale),
+        "attempts_mean": sum(t.attempts for t in tickets) / len(tickets),
+        "dropped_messages": net.dropped_messages,
+        "failed_sends": net.failed_sends,
+        "outbox_retries": cluster.store.outbox_retries,
+        "delta_gaps": cluster.store.delta_gaps,
+        "anti_entropy_ships": cluster.store.anti_entropy_ships,
+        "tombstone_rejections": sum(
+            cluster.store.replica(n, "m").tombstone_rejections for n in NODES
+        ),
+        "sync_bytes": cluster.store.sync_bytes(),
+        "warm_starts": cluster.warm_starts(),
+        "converged": True,
+        "end_ms": net.clock.now_ms,
+    }
+
+
+def _full_plan():
+    from repro.store import DegradedWindow, FaultPlan, PartitionWindow
+
+    return FaultPlan(
+        partitions=[PartitionWindow("n1", "n2", 5_000.0, 9_000.0)],
+        degraded=[DegradedWindow("n0", "n1", 10_000.0, 13_000.0,
+                                 latency_mult=4.0, bandwidth_mult=0.25)],
+        drop_prob=0.03,
+        seed=1234,
+    )
+
+
+FULL_CHURN = [
+    # two full crash/restart cycles, the second losing its replica too
+    (2_000.0, "crash", "n0"),
+    (6_000.0, "restart", "n0"),
+    (10_000.0, "crash_lose_replica", "n2"),
+    (14_000.0, "restart", "n2"),
+]
+
+
+def churn_bench(emit) -> None:
+    m = run_churn(12, 8, _full_plan(), FULL_CHURN)
+    emit("churn_p50_latency", m["p50_latency_ms"] * 1e3,
+         f"ok={m['turns_ok']}/{m['turns_total']}")
+    emit("churn_p99_latency", m["p99_latency_ms"] * 1e3,
+         f"failovers={m['failovers']};retries={m['outbox_retries']}")
+    emit("churn_success_rate", m["success_rate"],
+         f"node_down={m['failed_node_down']};protocol={m['failed_protocol']}")
+
+    # under this plan the fleet must keep serving: crashes only ever take
+    # one of three replicas, so failover keeps the success rate high
+    assert m["success_rate"] >= 0.75, m["success_rate"]
+    assert m["failovers"] > 0
+    assert m["outbox_retries"] > 0          # the drop_prob actually bit
+    assert m["warm_starts"] > 0             # restarts re-primed session KV
+
+    out = {
+        "nodes": list(NODES),
+        "think_ms": THINK_MS,
+        "timeout_ms": TIMEOUT_MS,
+        "fault_plan": {
+            "partition_n1_n2_ms": [5_000.0, 9_000.0],
+            "degraded_n0_n1_ms": [10_000.0, 13_000.0],
+            "drop_prob": 0.03,
+            "seed": 1234,
+        },
+        "churn_events": [[t, kind, node] for t, kind, node in FULL_CHURN],
+        "metrics": m,
+        "acceptance": {
+            "hung_tickets": 0,
+            "silent_stale_strong": m["silent_stale_strong"],
+            "success_rate": m["success_rate"],
+            "converged_after_restart_all": m["converged"],
+        },
+    }
+    path = Path(__file__).resolve().parents[1] / "BENCH_churn.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def smoke() -> None:
+    """CI fast-gate smoke: a smaller fleet, one crash/restart cycle and one
+    partition window — same acceptance asserts as the full run (no hung
+    tickets, no silent STRONG stale serves, post-churn convergence)."""
+    from repro.store import FaultPlan, PartitionWindow
+
+    plan = FaultPlan(
+        partitions=[PartitionWindow("n1", "n2", 1_500.0, 3_000.0)],
+        drop_prob=0.05,
+        seed=7,
+    )
+    m = run_churn(6, 4, plan, [(1_000.0, "crash", "n0"),
+                               (2_500.0, "restart", "n0")])
+    assert m["success_rate"] >= 0.7, m["success_rate"]
+    assert m["failovers"] > 0
+    print("churn smoke OK:", json.dumps({
+        "success_rate": round(m["success_rate"], 3),
+        "failovers": m["failovers"],
+        "outbox_retries": m["outbox_retries"],
+        "p99_latency_ms": round(m["p99_latency_ms"], 1),
+    }))
+
+
+def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    churn_bench(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import sys
 
 
 def main() -> None:
+    from .churn_bench import churn_bench
     from .concurrency_bench import concurrency_bench
     from .kernel_bench import kernel_microbench
     from .migration_bench import migration_bench
@@ -31,7 +32,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     benches = ALL_FIGURES + [
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
-        concurrency_bench, paged_kv_bench, paged_attn_bench,
+        concurrency_bench, paged_kv_bench, paged_attn_bench, churn_bench,
     ]
     for bench in benches:
         tag = bench.__name__

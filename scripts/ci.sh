@@ -20,6 +20,9 @@ python -m benchmarks.paged_kv_bench --smoke
 echo "== smoke: paged attention kernel (cost scales with actual kv_len) =="
 python -m benchmarks.paged_attn_bench --smoke
 
+echo "== smoke: node churn (crashes + partition + loss; failover, convergence) =="
+python -m benchmarks.churn_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 

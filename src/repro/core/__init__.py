@@ -7,6 +7,7 @@ distributed KV store (repro.store).
 """
 
 from .protocol import (
+    NODE_DOWN,
     ConsistencyPolicy,
     ContextMode,
     Request,
@@ -14,6 +15,7 @@ from .protocol import (
     StaleContextError,
     Ticket,
     Timing,
+    is_node_down_error,
 )
 from .tokens import RawContext, TokenizedContext
 from .session import ChatTurn, Session, context_key, fresh_session_id, fresh_user_id
@@ -33,6 +35,8 @@ from .manager import (
 )
 
 __all__ = [
+    "NODE_DOWN",
+    "is_node_down_error",
     "ConsistencyPolicy",
     "ContextMode",
     "Request",

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Protocol, Tuple
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 from ..store.distributed import DistributedKVStore
 from ..store.network import Network
@@ -57,6 +57,7 @@ from .consistency import (
     read_with_turn_check_async,
 )
 from .protocol import (
+    NODE_DOWN,
     ConsistencyPolicy,
     ContextMode,
     Request,
@@ -175,6 +176,40 @@ class ContextManager:
     service: LLMServiceProtocol
     retry: RetryPolicy = field(default_factory=RetryPolicy)
     context_ttl_ms: Optional[float] = None
+    # -- crash/restart state (docs/architecture.md, "Failure model") --------
+    down: bool = field(default=False, init=False)
+    _epoch: int = field(default=0, init=False, repr=False)
+    _next_rid: int = field(default=0, init=False, repr=False)
+    # rid -> (request, user_id, session_id, on_done) for every turn between
+    # submit and finish; a crash fails them all fast instead of leaving the
+    # client's ticket hanging on a completion event that will never fire
+    _inflight: Dict[int, Tuple[Request, str, str, Callable[[Response], None]]] = field(
+        default_factory=dict, init=False, repr=False
+    )
+    crashed_inflight: int = field(default=0, init=False)
+
+    # -- churn ------------------------------------------------------
+    def crash(self) -> int:
+        """Process crash: every phase callback of the current epoch becomes
+        a no-op, and all in-flight turns fail *now* with a node-down error
+        (the paper's client must be notified, not stranded). Returns the
+        number of turns failed."""
+        self.down = True
+        self._epoch += 1
+        pending, self._inflight = self._inflight, {}
+        for req, user_id, session_id, on_done in pending.values():
+            on_done(Response(
+                text="", user_id=user_id, session_id=session_id,
+                turn=req.turn, served_by=self.node_id,
+                n_prompt_tokens=0, n_context_tokens=0, n_generated_tokens=0,
+                timing=Timing(),
+                error=f"{NODE_DOWN}: {self.node_id} crashed mid-request",
+            ))
+        self.crashed_inflight += len(pending)
+        return len(pending)
+
+    def restart(self) -> None:
+        self.down = False
 
     @property
     def tokenize_scale(self) -> float:
@@ -219,6 +254,32 @@ class ContextManager:
         key = context_key(user_id, session_id)
         tok = self.tokenizer
 
+        if self.down:
+            # connection refused — fail fast, never schedule phases
+            on_done(Response(
+                text="", user_id=user_id, session_id=session_id,
+                turn=req.turn, served_by=self.node_id,
+                n_prompt_tokens=0, n_context_tokens=0, n_generated_tokens=0,
+                timing=timing,
+                error=f"{NODE_DOWN}: {self.node_id} is down",
+            ))
+            return
+
+        # Register the turn and epoch-stamp every phase boundary: if the
+        # node crashes while this turn is in flight, crash() resolves it
+        # with a node-down error and the stale phase events become no-ops.
+        epoch = self._epoch
+        rid = self._next_rid
+        self._next_rid += 1
+        self._inflight[rid] = (req, user_id, session_id, on_done)
+
+        def finish_done(resp: Response) -> None:
+            if self._inflight.pop(rid, None) is not None:
+                on_done(resp)
+
+        def alive() -> bool:
+            return self._epoch == epoch and rid in self._inflight
+
         if req.mode is ContextMode.CLIENT_SIDE:
             # History ships with the request; tokenize all of it, every time.
             t0 = time.perf_counter()
@@ -234,7 +295,7 @@ class ContextManager:
             )
             net.schedule(
                 net.clock.now_ms + timing.tokenize_ms,
-                lambda: self._infer(pt, on_done),
+                lambda: alive() and self._infer(pt, finish_done, alive),
             )
             return
 
@@ -243,6 +304,8 @@ class ContextManager:
         # inside a backoff window is applied (in timestamp order) before
         # the retry fires, and other tenants keep making progress.
         def resume(rr: ReadResult) -> None:
+            if not alive():
+                return
             timing.context_read_ms = rr.wait_ms
             timing.retries = rr.retries
             if rr.stale and req.policy is ConsistencyPolicy.STRONG:
@@ -251,7 +314,7 @@ class ContextManager:
                     f"{getattr(rr.value, 'version', None)} < client turn "
                     f"{req.turn} after {rr.retries} retries"
                 )
-                on_done(Response(
+                finish_done(Response(
                     text="", user_id=user_id, session_id=session_id,
                     turn=req.turn, served_by=self.node_id,
                     n_prompt_tokens=0, n_context_tokens=0,
@@ -270,7 +333,7 @@ class ContextManager:
             )
             net.schedule(
                 net.clock.now_ms + timing.tokenize_ms,
-                lambda: self._infer(pt, on_done),
+                lambda: alive() and self._infer(pt, finish_done, alive),
             )
 
         read_with_turn_check_async(
@@ -324,20 +387,28 @@ class ContextManager:
         )
 
     # -- phase 2: infer ---------------------------------------------
-    def _infer(self, pt: PreparedTurn, on_done: Callable[[Response], None]) -> None:
+    def _infer(
+        self,
+        pt: PreparedTurn,
+        on_done: Callable[[Response], None],
+        alive: Optional[Callable[[], bool]] = None,
+    ) -> None:
         """Hand the prepared input to the LLM Service. The session's context
         key doubles as the service's KV-cache key: services with a session
         pool reuse the stored prefix's KV state and prefill only the new
         tokens — correctness is guarded by the service's prefix match. The
         service schedules completion (queueing + inference) on the sim
-        clock; ``_finish`` runs at that time."""
+        clock; ``_finish`` runs at that time (skipped if the node crashed
+        while the request was in the service — crash() already failed it)."""
         self.service.submit(
             context_ids=pt.context_ids,
             prompt_ids=pt.prompt_ids,
             max_new_tokens=pt.req.max_new_tokens,
             cache_key=pt.key,
             net=self.store.network,
-            on_done=lambda result: self._finish(pt, result, on_done),
+            on_done=lambda result: (
+                (alive is None or alive()) and self._finish(pt, result, on_done)
+            ),
         )
 
     # -- phase 3: finish --------------------------------------------
@@ -396,6 +467,13 @@ class ContextManager:
         on_done(resp)
 
     # ---------------------------------------------------------------
-    def forget(self, user_id: str, session_id: str) -> None:
-        """Client-requested context deletion (paper §3.3)."""
-        self.store.delete(self.node_id, self.keygroup, context_key(user_id, session_id))
+    def forget(
+        self, user_id: str, session_id: str, turn: Optional[int] = None
+    ) -> None:
+        """Client-requested context deletion (paper §3.3). ``turn`` is the
+        client's turn counter: the resulting tombstone then dominates any
+        in-flight replicated put of this session, even ones this node
+        hasn't seen (the client counter is the supremum of its writes)."""
+        self.store.delete(
+            self.node_id, self.keygroup, context_key(user_id, session_id), turn
+        )

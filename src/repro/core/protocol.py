@@ -129,6 +129,19 @@ class StaleContextError(RuntimeError):
     within the retry budget (paper §3.3 — node notifies the client)."""
 
 
+# Error-marker prefix for responses that failed because the serving node was
+# unavailable (crashed mid-request, down at submit, or unreachable). The
+# client's failover path retries these on a keygroup peer; protocol errors
+# (e.g. StaleContextError under STRONG) are NOT node-down and are not
+# retried — they are the consistency protocol speaking.
+NODE_DOWN = "node-down"
+
+
+def is_node_down_error(error: Optional[str]) -> bool:
+    """Does this Response.error mean the node (not the protocol) failed?"""
+    return error is not None and error.startswith(NODE_DOWN)
+
+
 @dataclass
 class Ticket:
     """Handle for one in-flight request on the submit/await serving path.
@@ -145,6 +158,10 @@ class Ticket:
     submitted_at_ms: float = 0.0
     response: Optional[Response] = None
     completed_at_ms: Optional[float] = None
+    # Failover bookkeeping (docs/architecture.md, "Failure model"): how many
+    # submit attempts this logical turn took and which nodes served them.
+    attempts: int = 0
+    nodes_tried: List[str] = field(default_factory=list)
     _callbacks: List[Callable[["Ticket"], None]] = field(
         default_factory=list, repr=False
     )

@@ -14,19 +14,33 @@ Two ways to drive a conversation:
 - **chat()** (blocking shim): submit one turn and drive the event loop
   until it resolves — identical Responses to submit/await for a serialized
   workload, kept so single-tenant callers read like the paper's setup.
+
+Failure handling (docs/architecture.md, "Failure model"): a turn whose node
+is down, crashes mid-request, or exceeds ``timeout_ms`` *fails over* — the
+client retries on the next keygroup peer after ``failover_backoff_ms``, up
+to ``max_attempts`` attempts, and the turn-counter protocol then does
+exactly what the paper promises on the peer: STRONG waits for replication
+or fails explicitly; AVAILABLE degrades to stale-but-served. A ticket
+always resolves — with the response, a protocol error, or a node-down
+error after the attempt budget — never hangs. Protocol errors (e.g.
+STRONG staleness) are not failed over: they are the consistency protocol
+speaking, and a different node would only be *more* stale.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.protocol import (
+    NODE_DOWN,
     ConsistencyPolicy,
     ContextMode,
     Request,
     Response,
     Ticket,
+    Timing,
+    is_node_down_error,
 )
 from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
 
@@ -54,12 +68,35 @@ class LLMClient:
     user_id: Optional[str] = None
     session_id: Optional[str] = None
     turn: int = 0
+    # -- failure handling --------------------------------------------------
+    # per-attempt response deadline in sim ms (None: wait forever — the
+    # pre-failover behaviour); a timed-out attempt fails over like node-down
+    timeout_ms: Optional[float] = None
+    # retry on keygroup peers when an attempt fails with node-down/timeout
+    failover: bool = True
+    max_attempts: int = 3
+    failover_backoff_ms: float = 20.0
+    failovers: int = 0
+    timeouts: int = 0
+    late_responses: int = 0   # answers that arrived after we gave up on them
     # client-side mode keeps the full history locally and ships it each turn
     history: List[Tuple[str, str]] = field(default_factory=list)
     request_bytes_log: List[int] = field(default_factory=list)
     response_log: List[Response] = field(default_factory=list)
 
     # -- submit/await -----------------------------------------------------
+    def _failover_targets(self, primary: str) -> List[str]:
+        """Attempt order: the chosen node, then its keygroup peers in ring
+        order (they hold replicas of this session's context)."""
+        try:
+            members = self.cluster.store.keygroup(self.model).members
+        except KeyError:
+            return [primary]
+        if primary not in members:
+            return [primary] + [m for m in members]
+        i = members.index(primary)
+        return [members[(i + k) % len(members)] for k in range(len(members))]
+
     def submit(
         self,
         prompt: str,
@@ -75,11 +112,30 @@ class LLMClient:
         other tenants' in-flight turns are neither stalled nor
         fast-forwarded). The Request is built when the send actually fires,
         so a deferred turn carries the session state left by the previous
-        one."""
+        one. On node-down or timeout the turn retries on a keygroup peer
+        (see the module docstring); the ticket always resolves."""
         net = self.cluster.network
         ticket = Ticket(submitted_at_ms=net.clock.now_ms + max(0.0, delay_ms))
+        targets = self._failover_targets(node_id)
+        # Attempt generation: each attempt (and each abandonment) bumps it,
+        # so events belonging to a dead attempt — late deliveries, stale
+        # deadline timers — become no-ops instead of double-resolving.
+        state: Dict[str, int] = {"gen": 0}
 
-        def send() -> None:
+        def current(g: int) -> bool:
+            return state["gen"] == g and not ticket.done
+
+        def start_attempt(idx: int) -> None:
+            if ticket.done:
+                return
+            state["gen"] += 1
+            g = state["gen"]
+            target = targets[idx % len(targets)]
+            ticket.attempts += 1
+            ticket.nodes_tried.append(target)
+            send(g, idx, target)
+
+        def send(g: int, idx: int, target: str) -> None:
             req = Request(
                 prompt=prompt,
                 model=self.model,
@@ -95,25 +151,59 @@ class LLMClient:
                 ),
             )
             ticket.request = req
+            if not net.reachable(CLIENT_HOST, target):
+                # connection refused after one link latency — visible, fast
+                net.schedule(
+                    net.clock.now_ms + net.link(CLIENT_HOST, target).latency_ms,
+                    lambda: current(g) and fail_attempt(
+                        g, idx, target, f"{NODE_DOWN}: {target} unreachable"
+                    ),
+                )
+                return
             up_bytes = req.wire_bytes()
             self.request_bytes_log.append(up_bytes)
-            up_ms = net.send(CLIENT_HOST, node_id, up_bytes, CLIENT_UP_TAG)
-            net.schedule(net.clock.now_ms + up_ms, lambda: arrive(req, up_ms))
+            up_ms = net.send(CLIENT_HOST, target, up_bytes, CLIENT_UP_TAG)
+            net.schedule(
+                net.clock.now_ms + up_ms, lambda: arrive(g, idx, target, req, up_ms)
+            )
+            if self.timeout_ms is not None:
+                net.schedule(
+                    net.clock.now_ms + self.timeout_ms,
+                    lambda: deadline(g, idx, target),
+                )
 
-        def arrive(req: Request, up_ms: float) -> None:
-            self.cluster.node(node_id).submit(
-                req, on_done=lambda resp: respond(resp, up_ms)
+        def arrive(g: int, idx: int, target: str, req: Request, up_ms: float) -> None:
+            if not current(g):
+                return
+            node = self.cluster.node(target)
+            if not node.alive or not net.node_is_up(target):
+                fail_attempt(
+                    g, idx, target, f"{NODE_DOWN}: {target} refused connection"
+                )
+                return
+            node.submit(
+                req, on_done=lambda resp: respond(g, idx, target, resp, up_ms)
             )
 
-        def respond(resp: Response, up_ms: float) -> None:
+        def respond(g: int, idx: int, target: str, resp: Response, up_ms: float) -> None:
+            # The response (or the crash notification — our TCP-RST model)
+            # flows back over the downlink.
             down_ms = net.send(
-                node_id, CLIENT_HOST, resp.wire_bytes(), CLIENT_DOWN_TAG
+                target, CLIENT_HOST, resp.wire_bytes(), CLIENT_DOWN_TAG
             )
             resp.timing.network_up_ms = up_ms
             resp.timing.network_down_ms = down_ms
-            net.schedule(net.clock.now_ms + down_ms, lambda: deliver(resp))
+            net.schedule(
+                net.clock.now_ms + down_ms, lambda: deliver(g, idx, target, resp)
+            )
 
-        def deliver(resp: Response) -> None:
+        def deliver(g: int, idx: int, target: str, resp: Response) -> None:
+            if not current(g):
+                self.late_responses += 1
+                return
+            if is_node_down_error(resp.error):
+                fail_attempt(g, idx, target, resp.error)
+                return
             if resp.error is None:
                 # adopt server-assigned identifiers; bump the turn counter
                 self.user_id = resp.user_id
@@ -122,15 +212,47 @@ class LLMClient:
                 if self.mode is ContextMode.CLIENT_SIDE:
                     self.history.append(("user", prompt))
                     self.history.append(("assistant", resp.text))
+            resolve(resp)
+
+        def deadline(g: int, idx: int, target: str) -> None:
+            if not current(g):
+                return
+            self.timeouts += 1
+            fail_attempt(
+                g, idx, target,
+                f"{NODE_DOWN}: timeout after {self.timeout_ms:g} ms "
+                f"waiting on {target}",
+            )
+
+        def fail_attempt(g: int, idx: int, target: str, reason: str) -> None:
+            if not current(g):
+                return
+            state["gen"] += 1  # abandon: late events for attempt g no-op
+            if self.failover and idx + 1 < self.max_attempts and len(targets) > 1:
+                self.failovers += 1
+                net.schedule(
+                    net.clock.now_ms + self.failover_backoff_ms,
+                    lambda: start_attempt(idx + 1),
+                )
+                return
+            # attempt budget exhausted: resolve explicitly — never hang
+            resolve(Response(
+                text="", user_id=self.user_id or "",
+                session_id=self.session_id or "", turn=self.turn,
+                served_by=target, n_prompt_tokens=0, n_context_tokens=0,
+                n_generated_tokens=0, timing=Timing(), error=reason,
+            ))
+
+        def resolve(resp: Response) -> None:
             self.response_log.append(resp)
             ticket.resolve(resp, net.clock.now_ms)
             if on_response is not None:
                 on_response(resp)
 
         if delay_ms > 0:
-            net.schedule(net.clock.now_ms + delay_ms, send)
+            net.schedule(net.clock.now_ms + delay_ms, lambda: start_attempt(0))
         else:
-            send()
+            start_attempt(0)
         return ticket
 
     def run_session(
@@ -138,6 +260,7 @@ class LLMClient:
         turns: Sequence[Tuple[str, str]],
         think_ms: float = 0.0,
         on_turn: Optional[Callable[[int, Response], None]] = None,
+        continue_on_error: bool = False,
     ) -> SessionTrace:
         """Chain a multi-turn conversation: turn ``i+1`` is sent
         ``think_ms`` after turn ``i``'s response arrives at the client —
@@ -145,7 +268,10 @@ class LLMClient:
         ``turns`` is a sequence of ``(prompt, node_id)`` pairs (the node
         choice per turn models mobility, like the paper's switches). The
         session stops early on a protocol error (e.g. a STRONG-policy
-        staleness failure); drive to completion with
+        staleness failure) unless ``continue_on_error`` — churn workloads
+        set it so one explicitly failed turn doesn't strand the rest of the
+        conversation (the turn counter didn't advance; the next turn simply
+        retries against the same context). Drive to completion with
         ``EdgeCluster.run_until_quiet()``."""
         trace = SessionTrace(client=self)
 
@@ -160,7 +286,7 @@ class LLMClient:
             trace.responses.append(resp)
             if on_turn is not None:
                 on_turn(i, resp)
-            if resp.error is None and i + 1 < len(turns):
+            if (resp.error is None or continue_on_error) and i + 1 < len(turns):
                 launch(i + 1, think_ms)
             else:
                 trace.done = True

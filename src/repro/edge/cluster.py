@@ -20,7 +20,7 @@ from ..core.consistency import RetryPolicy
 from ..core.manager import LLMServiceProtocol
 from ..core.tokens import RawContext, TokenizedContext
 from ..store.distributed import DistributedKVStore
-from ..store.network import Link, Network
+from ..store.network import FaultPlan, Link, Network
 from .node import EdgeNode
 
 CLIENT_UP_TAG = "client-up"
@@ -110,3 +110,46 @@ class EdgeCluster:
     def converge(self) -> None:
         """Drain in-flight replication (end-of-experiment barrier)."""
         self.network.run_until_quiet()
+
+    # -- failure model (docs/architecture.md, "Failure model") -------------
+    def install_faults(self, plan: FaultPlan) -> None:
+        """Arm a deterministic fault schedule on the cluster's network."""
+        self.network.install_faults(plan)
+
+    def live_nodes(self) -> List[str]:
+        return [nid for nid, n in self.nodes.items() if n.alive]
+
+    def crash(self, node_id: str, *, lose_replica: bool = False) -> int:
+        """Crash a node: it drops off the network (peers' replication to it
+        parks in the outbox), its in-flight turns fail fast with node-down
+        errors, and its volatile session-KV pool is lost. With
+        ``lose_replica=True`` the node's KV *replica* is lost too (a
+        non-durable store) — anti-entropy on restart re-fetches everything
+        from peers. Returns the number of in-flight turns failed."""
+        self.network.set_node_down(node_id, True)
+        failed = self.nodes[node_id].crash()
+        if lose_replica:
+            self.store.drop_replica_data(node_id)
+        return failed
+
+    def restart(self, node_id: str) -> None:
+        """Bring a crashed node back: rejoin the network, re-prime the
+        session pool from whatever the local replica kept, then run
+        anti-entropy catch-up (peers ship only the versions this node
+        missed; its own parked outbox writes ship out too) — arriving
+        contexts re-prime through the normal warm-start hook."""
+        self.network.set_node_down(node_id, False)
+        self.nodes[node_id].restart()
+        self.store.anti_entropy(node_id)
+        self.store.kick_outbox(node_id)
+
+    def converged(self) -> bool:
+        """Do all *live* replicas of every keygroup hold identical
+        (version, content) state? The post-churn acceptance check."""
+        live = set(self.live_nodes())
+        return all(
+            self.store.replicas_converged(
+                name, [n for n in self.store.keygroup(name).members if n in live]
+            )
+            for name in self.store.keygroup_names()
+        )

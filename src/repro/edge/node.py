@@ -35,6 +35,12 @@ class EdgeNode:
     # the work overlaps client think time, like the paper's async update).
     warm_starts: int = 0
     warm_start_ms: float = 0.0
+    # Liveness (docs/architecture.md, "Failure model"): a crashed node
+    # refuses new submits, fails its in-flight turns fast, and loses its
+    # volatile session-KV pool; the KV *replica* survives unless the
+    # cluster-level crash was invoked with lose_replica=True.
+    alive: bool = True
+    crashes: int = 0
 
     @classmethod
     def create(
@@ -84,6 +90,41 @@ class EdgeNode:
     def handle(self, req: Request) -> Response:
         """Blocking compatibility shim (see ContextManager.handle)."""
         return self.manager.handle(req)
+
+    # -- churn --------------------------------------------------------------
+    def crash(self) -> int:
+        """Process crash: in-flight turns fail fast with a node-down error,
+        the service drops its volatile session-KV state, and new submits are
+        refused until :meth:`restart`. Returns the number of in-flight turns
+        failed. (The KV replica is the store's concern — see
+        ``EdgeCluster.crash``.)"""
+        self.alive = False
+        self.crashes += 1
+        failed = self.manager.crash()
+        crash_fn = getattr(self.service, "crash", None)
+        if crash_fn is not None:
+            crash_fn()
+        return failed
+
+    def restart(self) -> int:
+        """Come back up and re-prime the session KV pool from whatever the
+        local replica still holds (the warm-start hook replays each stored
+        tokenized context). Anti-entropy catch-up is the cluster/store's
+        job; contexts it ships will prime through the normal apply hook.
+        Returns the number of contexts re-primed."""
+        self.alive = True
+        self.manager.restart()
+        primed = 0
+        if not self.service.capabilities().prime:
+            return 0
+        store = self.manager.store
+        keygroup = self.manager.keygroup
+        if store.has_replica(self.node_id, keygroup):
+            for key, vv in list(store.replica(self.node_id, keygroup).items()):
+                before = self.warm_starts
+                self._on_replicated_context(keygroup, key, vv)
+                primed += self.warm_starts - before
+        return primed
 
     # -- migration warm-start hook ----------------------------------------
     def _on_replicated_context(

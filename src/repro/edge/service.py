@@ -131,6 +131,15 @@ class EchoLLMService:
         self._kv_source[cache_key] = "prime"
         return True
 
+    def crash(self) -> None:
+        """Process crash: the (virtual) session KV pool is volatile — lose
+        every remembered prefix and free all inference streams (their
+        requests were failed by the manager)."""
+        self._kv_prefix.clear()
+        self._kv_source.clear()
+        self._slot_free_at = [0.0] * self.n_slots
+        self._clock_owner = None  # re-anchor to the clock on next submit
+
     # -- async serving entrypoint ---------------------------------------
     def submit(
         self,

@@ -519,6 +519,15 @@ class JaxLLMService:
             return False
         return self.engine.prime(cache_key, list(token_ids))
 
+    def crash(self) -> None:
+        """Process crash: the session KV pool is device memory — gone. The
+        engine weights/jit caches are treated as re-warmed on restart (we
+        model state loss, not reload time)."""
+        if self.engine.session_pool is not None:
+            self.engine.session_pool.clear()
+        self._busy_until = 0.0
+        self._clock_owner = None
+
     def submit(
         self,
         context_ids: List[int],

@@ -609,6 +609,25 @@ class BatchedServer:
             else:
                 self._next_tok[idx] = int(nxt[idx])
 
+    # -- churn -----------------------------------------------------------
+    def crash(self) -> None:
+        """Process crash: queue, in-flight slots, and the session KV pool
+        are all volatile device/process state — drop everything. Paged mode
+        returns every page to the free list (the allocator survives as the
+        restarted process's fresh pool)."""
+        self.queue.clear()
+        self._submit_times.clear()
+        for idx in range(self.n_slots):
+            self.slots[idx] = None
+            if self.paged and self.slot_pages[idx]:
+                self.allocator.decref(self.slot_pages[idx])
+                self.slot_pages[idx] = []
+        if self.paged:
+            self._table[:, :] = SCRATCH_PAGE
+        if self.session_pool is not None:
+            self.session_pool.clear()
+        self.finished.clear()
+
     def run_to_completion(self, max_steps: int = 10_000) -> List[FinishedRequest]:
         steps = 0
         while self.busy and steps < max_steps:
@@ -680,6 +699,9 @@ class BatchedLLMService:
         self._busy_until = 0.0
         self._seen_finished = 0
         self._clock_owner: Optional[Network] = None
+        # bumped by crash(): pump events scheduled before the crash become
+        # no-ops instead of stepping the restarted server
+        self._pump_epoch = 0
 
     @classmethod
     def create(
@@ -721,6 +743,18 @@ class BatchedLLMService:
 
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         return self.server.prime(cache_key, list(token_ids))
+
+    def crash(self) -> None:
+        """Process crash: drop pending bookkeeping and the server's queue/
+        slots/session pool; any already-scheduled pump event is invalidated
+        (the manager has failed the in-flight turns — completions must not
+        fire for them)."""
+        self._pump_epoch += 1
+        self._pending.clear()
+        self._pump_scheduled = False
+        self._busy_until = 0.0
+        self.server.crash()
+        self._seen_finished = 0
 
     def submit(
         self,
@@ -793,13 +827,16 @@ class BatchedLLMService:
             return
         self._pump_scheduled = True
         net.schedule(
-            max(net.clock.now_ms, self._busy_until), lambda: self._pump(net)
+            max(net.clock.now_ms, self._busy_until),
+            lambda e=self._pump_epoch: self._pump(net, e),
         )
 
-    def _pump(self, net: Network) -> None:
+    def _pump(self, net: Network, epoch: Optional[int] = None) -> None:
         """One scheduler tick on the sim clock: admissions are recorded at
         the tick's start, the step's wall time becomes the tick's duration,
         and completions resolve at its end."""
+        if epoch is not None and epoch != self._pump_epoch:
+            return  # scheduled before a crash — the server was reset
         self._pump_scheduled = False
         if not self.server.busy:
             return
@@ -828,7 +865,7 @@ class BatchedLLMService:
         self._drain_consumed()
         if self.server.busy:
             self._pump_scheduled = True
-            net.schedule(end, lambda: self._pump(net))
+            net.schedule(end, lambda e=self._pump_epoch: self._pump(net, e))
 
     def _result_from(
         self,

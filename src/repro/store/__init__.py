@@ -1,15 +1,40 @@
 from .kvstore import Replica, VersionedValue
-from .network import Link, Network, SimClock, TrafficCounter
-from .distributed import DistributedKVStore, Keygroup, SYNC_TAG
+from .network import (
+    DegradedWindow,
+    DropWindow,
+    FaultPlan,
+    Link,
+    Network,
+    NodeDownWindow,
+    PartitionWindow,
+    SimClock,
+    TrafficCounter,
+)
+from .distributed import (
+    ACK_TAG,
+    DistributedKVStore,
+    Keygroup,
+    OutboxItem,
+    OutboxPolicy,
+    SYNC_TAG,
+)
 
 __all__ = [
     "Replica",
     "VersionedValue",
+    "DegradedWindow",
+    "DropWindow",
+    "FaultPlan",
     "Link",
     "Network",
+    "NodeDownWindow",
+    "PartitionWindow",
     "SimClock",
     "TrafficCounter",
+    "ACK_TAG",
     "DistributedKVStore",
     "Keygroup",
+    "OutboxItem",
+    "OutboxPolicy",
     "SYNC_TAG",
 ]
