@@ -21,6 +21,7 @@ def main() -> None:
     from .paper_figures import ALL_FIGURES
     from .roofline_table import roofline_table
     from .session_bench import session_kv_bench
+    from .shared_prefix_bench import shared_prefix_bench
 
     wanted = [a.lower() for a in sys.argv[1:]]
     rows = []

@@ -9,7 +9,16 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== fast gate: pytest -q -m 'not slow' =="
+FAST_GATE_BUDGET_S="${FAST_GATE_BUDGET_S:-90}"
+fast_t0=$(date +%s)
 python -m pytest -q -m "not slow"
+fast_dt=$(( $(date +%s) - fast_t0 ))
+echo "== fast gate took ${fast_dt}s (budget ${FAST_GATE_BUDGET_S}s) =="
+if (( fast_dt > FAST_GATE_BUDGET_S )); then
+    echo "FAIL: fast gate exceeded its ${FAST_GATE_BUDGET_S}s budget (${fast_dt}s)." >&2
+    echo "Mark new long-running tests @pytest.mark.slow to keep the inner loop fast." >&2
+    exit 1
+fi
 
 echo "== smoke: concurrent multi-client submit/await (echo, no device work) =="
 python -m benchmarks.concurrency_bench --smoke
@@ -19,6 +28,9 @@ python -m benchmarks.paged_kv_bench --smoke
 
 echo "== smoke: paged attention kernel (cost scales with actual kv_len) =="
 python -m benchmarks.paged_attn_bench --smoke
+
+echo "== smoke: cross-session shared-prefix paging (same-prompt tenants dedup) =="
+python -m benchmarks.shared_prefix_bench --smoke
 
 echo "== smoke: node churn (crashes + partition + loss; failover, convergence) =="
 python -m benchmarks.churn_bench --smoke

@@ -1,5 +1,5 @@
 from . import ops, ref
-from .kernel import paged_attention_pallas
+from .kernel import paged_attention_pallas, shared_prefix_pallas
 from .ops import paged_attention
 from .ref import paged_attention_ref
 
@@ -9,4 +9,5 @@ __all__ = [
     "paged_attention",
     "paged_attention_pallas",
     "paged_attention_ref",
+    "shared_prefix_pallas",
 ]

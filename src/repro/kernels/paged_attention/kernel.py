@@ -49,20 +49,35 @@ NEG_INF = -1e30
 def _paged_decode_kernel(
     table_ref, bound_ref, qpos_ref,     # scalar prefetch (SMEM)
     kvpos_ref, q_ref, k_ref, v_ref,     # tensor blocks
-    o_ref,
-    acc_ref, m_ref, l_ref,              # VMEM scratch (persist over ip)
-    *, n_pb: int, window: int, softcap: float, scale: float,
+    *refs,                              # [acc0, m0, l0,] o | scratch acc, m, l
+    n_pb: int, window: int, softcap: float, scale: float,
+    start: int = 0, has_init: bool = False,
 ):
+    """One lane x one KV head x one page of online softmax. With
+    ``start``/``has_init`` this is the *suffix* pass of the shared-prefix
+    split: the grid walks pages [start, MP) only, and the softmax state is
+    seeded from the shared pass's (acc, m, l) stats instead of the empty
+    state — the exact continuation of the single-pass recurrence, so the
+    two-pass result is identical to walking all pages in one pass."""
+    if has_init:
+        acc0_ref, m0_ref, l0_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
     bi = pl.program_id(0)
     ip = pl.program_id(2)
 
     @pl.when(ip == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        if has_init:
+            acc_ref[...] = acc0_ref[0, 0]
+            m_ref[...] = m0_ref[0, 0]
+            l_ref[...] = l0_ref[0, 0]
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
 
-    @pl.when(ip < bound_ref[bi])
+    @pl.when(ip + start < bound_ref[bi])
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)            # (G, Dh)
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # (ps, Dh) — one page
@@ -101,6 +116,130 @@ def _paged_decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _shared_prefix_kernel(
+    pages_ref, qpos_ref,                # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,                # tensor blocks
+    acc_o, m_o, l_o,                    # outputs: softmax stats, all lanes
+    acc_ref, m_ref, l_ref,              # VMEM scratch (persist over ip)
+    *, n_sp: int, ps: int, window: int, softcap: float, scale: float,
+):
+    """Shared-prefix pass: every page in ``pages`` (a run of physical pages
+    holding positions [0, n_sp*ps), shared by the whole batch) is DMA'd
+    ONCE per KV head and attended by all B lanes together — K/V traffic is
+    O(unique pages), not O(B * pages). Emits the per-lane online-softmax
+    partial state (acc, m, l) for the suffix pass to continue from. Pages
+    are full and resident by contract (the caller only passes a run of
+    refcount-held full pages), so the only masking is causal/window — a
+    lane whose query sits inside the run simply masks the tail and gets its
+    complete answer here."""
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    b, _, g, dh = q_ref.shape
+    q = q_ref[:, 0].astype(jnp.float32).reshape(b * g, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (ps, Dh) — one page
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).reshape(b, g, ps) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    # slot == position inside the run: page ip holds [ip*ps, (ip+1)*ps)
+    kp = ip * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    qp = qpos_ref[...][:, None]                        # (B, 1)
+    mask = kp <= qp                                    # (B, ps) causal
+    if window > 0:
+        mask = mask & (qp - kp < window)
+    mask = mask[:, None, :]                            # (B, 1, ps)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.reshape(b * g, ps), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(b, g, dh)
+    m_ref[...] = m_new
+
+    @pl.when(ip == n_sp - 1)
+    def _emit():
+        acc_o[:, 0] = acc_ref[...]
+        m_o[:, 0] = m_ref[...]
+        l_o[:, 0] = l_ref[...]
+
+
+def shared_prefix_pallas(
+    q: jnp.ndarray,             # (B, KV, G, Dh) — reshaped + rope'd by ops.py
+    pool_k: jnp.ndarray,        # (P, page_size, KV, Dh)
+    pool_v: jnp.ndarray,
+    shared_pages: jnp.ndarray,  # (S,) int32 physical page ids, positions [0, S*ps)
+    q_pos: jnp.ndarray,         # (B,) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+):
+    """Partial-softmax stats of all lanes over the shared run:
+    ``(acc, m, l)`` each ``(B, KV, G, ·)`` float32."""
+    b, kvh, g, dh = q.shape
+    ps = pool_k.shape[1]
+    n_sp = shared_pages.shape[0]
+    scale = 1.0 / (dh ** 0.5)
+
+    def page_map(hi, ip, pages, qpos):
+        return (pages[ip], 0, hi, 0)
+
+    def head_map(hi, ip, pages, qpos):
+        return (0, hi, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(kvh, n_sp),
+        in_specs=[
+            pl.BlockSpec((b, 1, g, dh), head_map),
+            pl.BlockSpec((1, ps, 1, dh), page_map),
+            pl.BlockSpec((1, ps, 1, dh), page_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1, g, dh), head_map),
+            pl.BlockSpec((b, 1, g, 1), head_map),
+            pl.BlockSpec((b, 1, g, 1), head_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, g, dh), jnp.float32),
+            pltpu.VMEM((b, g, 1), jnp.float32),
+            pltpu.VMEM((b, g, 1), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _shared_prefix_kernel,
+        n_sp=n_sp, ps=ps, window=window, softcap=softcap, scale=scale,
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        shared_pages.astype(jnp.int32), q_pos.astype(jnp.int32),
+        q, pool_k, pool_v,
+    )
+
+
 def paged_attention_pallas(
     q: jnp.ndarray,           # (B, KV, G, Dh) — reshaped + rope'd by ops.py
     pool_k: jnp.ndarray,      # (P, page_size, KV, Dh) — shared pool, one layer
@@ -113,33 +252,44 @@ def paged_attention_pallas(
     window: int = 0,
     softcap: float = 0.0,
     interpret: bool = False,
+    start: int = 0,           # first page-block the grid visits
+    init=None,                # optional (acc, m, l) stats from the shared pass
 ) -> jnp.ndarray:
     b, kvh, g, dh = q.shape
     ps = pool_k.shape[1]
     mp = page_table.shape[1]
     scale = 1.0 / (dh ** 0.5)
+    assert 0 <= start < mp, (start, mp)
+    has_init = init is not None
 
     def page_map(bi, hi, ip, table, bound, qpos):
         # beyond-bound steps re-map to the lane's last real page: the block
         # index repeats, so the pipeline skips the DMA and the scratch page
         # (table padding) is never dereferenced for an active lane
-        return (table[bi, jnp.minimum(ip, bound[bi] - 1)], 0, hi, 0)
+        return (table[bi, jnp.minimum(ip + start, bound[bi] - 1)], 0, hi, 0)
 
     def kvpos_map(bi, hi, ip, table, bound, qpos):
-        return (bi, jnp.minimum(ip, bound[bi] - 1), 0)
+        return (bi, jnp.minimum(ip + start, bound[bi] - 1), 0)
 
     def lane_map(bi, hi, ip, table, bound, qpos):
         return (bi, hi, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, ps), kvpos_map),
+        pl.BlockSpec((1, 1, g, dh), lane_map),
+        pl.BlockSpec((1, ps, 1, dh), page_map),
+        pl.BlockSpec((1, ps, 1, dh), page_map),
+    ]
+    if has_init:
+        in_specs += [
+            pl.BlockSpec((1, 1, g, dh), lane_map),
+            pl.BlockSpec((1, 1, g, 1), lane_map),
+            pl.BlockSpec((1, 1, g, 1), lane_map),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(b, kvh, mp),
-        in_specs=[
-            pl.BlockSpec((1, 1, ps), kvpos_map),
-            pl.BlockSpec((1, 1, g, dh), lane_map),
-            pl.BlockSpec((1, ps, 1, dh), page_map),
-            pl.BlockSpec((1, ps, 1, dh), page_map),
-        ],
+        grid=(b, kvh, mp - start),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dh), lane_map),
         scratch_shapes=[
             pltpu.VMEM((g, dh), jnp.float32),
@@ -148,14 +298,18 @@ def paged_attention_pallas(
         ],
     )
     kern = functools.partial(
-        _paged_decode_kernel, n_pb=mp, window=window, softcap=softcap, scale=scale
+        _paged_decode_kernel, n_pb=mp - start, window=window, softcap=softcap,
+        scale=scale, start=start, has_init=has_init,
     )
+    args = [
+        page_table.astype(jnp.int32), page_bound.astype(jnp.int32),
+        q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), q, pool_k, pool_v,
+    ]
+    if has_init:
+        args += list(init)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
         interpret=interpret,
-    )(
-        page_table.astype(jnp.int32), page_bound.astype(jnp.int32),
-        q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), q, pool_k, pool_v,
-    )
+    )(*args)

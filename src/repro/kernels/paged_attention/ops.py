@@ -10,7 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import paged_attention_pallas
+from .kernel import paged_attention_pallas, shared_prefix_pallas
 from .ref import paged_attention_ref
 
 
@@ -28,6 +28,7 @@ def paged_attention(
     page_table,   # (B, MP) physical page ids per lane
     q_pos,        # (B, 1) absolute position of the query token
     kv_pos,       # (B, MP*page_size) absolute positions per virtual slot
+    shared_pages=None,  # (S,) page ids every lane's table starts with
     *,
     window: int = 0,
     softcap: float = 0.0,
@@ -42,6 +43,16 @@ def paged_attention(
     the causal mask. ``max_pages`` additionally trims the *static* table
     width when the caller knows every lane's bound — e.g. the batched
     server's page-width bucketing — which shrinks the kernel grid itself.
+
+    ``shared_pages`` enables the cross-session shared-prefix split
+    (cascade/hydragen-style): the caller asserts that pages ``[0, S)`` of
+    EVERY lane's table are exactly ``shared_pages`` (full, resident pages
+    holding positions ``[0, S*page_size)``). Those pages are then attended
+    once per unique page for the whole batch (one DMA serves all B lanes)
+    and the per-lane kernel walks only pages ``[S, MP)``, seeded with the
+    shared pass's online-softmax stats — per-step K/V traffic drops from
+    O(B·kv_len) to O(unique_pages + B·suffix). The two-pass result is the
+    exact continuation of the single-pass softmax recurrence.
     """
     if interpret is None:
         interpret = _on_cpu()
@@ -57,9 +68,20 @@ def paged_attention(
     qp = q_pos.reshape(b).astype(jnp.int32)
     bound = jnp.clip((qp + ps) // ps, 1, mp)   # ceil((qp+1)/ps), junk-safe
     qr = q.reshape(b, kvh, g, dh)
+    start, init = 0, None
+    if shared_pages is not None and shared_pages.shape[0] > 0:
+        # the suffix grid must keep >= 1 page per lane (the lane's own tail
+        # page is exclusively held, hence never part of the shared run)
+        start = min(int(shared_pages.shape[0]), mp - 1)
+        if start > 0:
+            init = shared_prefix_pallas(
+                qr, pool_k, pool_v, shared_pages[:start], qp,
+                window=window, softcap=softcap, interpret=interpret,
+            )
     out = paged_attention_pallas(
         qr, pool_k, pool_v, page_table, bound, qp,
         kv_pos.reshape(b, mp, ps),
         window=window, softcap=softcap, interpret=interpret,
+        start=start, init=init,
     )
     return out.reshape(b, 1, h, dh)

@@ -181,6 +181,7 @@ def attention_decode_paged(
     window: int = 0,
     lin_k: Optional[jnp.ndarray] = None,  # (B, MP*ps, KV, Dh) pre-gathered view
     lin_v: Optional[jnp.ndarray] = None,
+    shared_pages: Optional[jnp.ndarray] = None,  # (S,) common leading pages
 ) -> jnp.ndarray:
     """Page-table-aware decode, two execution paths:
 
@@ -197,6 +198,13 @@ def attention_decode_paged(
       gathered here, per layer. The gathered view is transient and
       bit-identical to the full-width cache layout, so greedy decode
       matches the unpaged path exactly.
+
+    ``shared_pages`` (pallas path only; the reference path's gathered view
+    already reads each physical page once per *lane* and simply ignores
+    it): a run of pages every lane's table starts with — the kernel then
+    attends those once per unique page for the whole batch and walks only
+    the per-lane suffix (docs/architecture.md, "Cross-session shared-prefix
+    paging").
     """
     pos1d = positions[0] if positions.ndim == 3 else positions
     if cfg.attn_impl == "pallas":
@@ -206,6 +214,7 @@ def attention_decode_paged(
         q = _project_q_step(p, x, positions, cfg)
         out = paged_ops.paged_attention(
             q, pool_k, pool_v, page_table, pos1d, kv_pos,
+            shared_pages,
             window=window, softcap=cfg.attn_softcap,
         )
         out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)

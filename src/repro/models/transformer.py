@@ -414,7 +414,7 @@ def _moe_block_decode(bp, x, positions, cache_k, cache_v, kv_pos, cfg, window, r
 
 def _paged_attn_sublayer(
     bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
-    page_size, lin_k, lin_v,
+    page_size, lin_k, lin_v, shared_pages=None,
 ):
     """Shared attention sublayer of one paged decode block: scatter the
     token's K/V into its page cell, then attend through the page table
@@ -436,19 +436,19 @@ def _paged_attn_sublayer(
         lin_v = lin_v.at[bidx, slot].set(v_new[:, 0].astype(lin_v.dtype), mode="drop")
     h = attention_decode_paged(
         bp["attn"], h_in, positions, pk, pv, page_table, kv_pos, cfg,
-        window=window, lin_k=lin_k, lin_v=lin_v,
+        window=window, lin_k=lin_k, lin_v=lin_v, shared_pages=shared_pages,
     )
     return x + h, pk, pv
 
 
 def _dense_block_decode_paged(
     bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
-    page_size, lin_k=None, lin_v=None,
+    page_size, lin_k=None, lin_v=None, shared_pages=None,
 ):
     """One layer paged decode. pool_k/v: (P, ps, KV, Dh)."""
     x, pk, pv = _paged_attn_sublayer(
         bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
-        page_size, lin_k, lin_v,
+        page_size, lin_k, lin_v, shared_pages,
     )
     x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
     return x, pk, pv
@@ -456,11 +456,11 @@ def _dense_block_decode_paged(
 
 def _moe_block_decode_paged(
     bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
-    page_size, lin_k=None, lin_v=None,
+    page_size, lin_k=None, lin_v=None, shared_pages=None,
 ):
     x, pk, pv = _paged_attn_sublayer(
         bp, x, positions, pool_k, pool_v, page_table, kv_pos, cfg, window,
-        page_size, lin_k, lin_v,
+        page_size, lin_k, lin_v, shared_pages,
     )
     m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
     return x + m, pk, pv
@@ -474,6 +474,7 @@ def decode_step_paged(
     kv_pos: jnp.ndarray,          # (B, MP*ps) shared across full-cache groups
     tokens: jnp.ndarray,          # (B,1)
     pos: jnp.ndarray,             # (B,) absolute position of this token
+    shared_pages: Optional[jnp.ndarray] = None,  # (S,) common leading pages
 ) -> Tuple[jnp.ndarray, List[Cache], jnp.ndarray]:
     """serve_step against a *paged* KV pool: the batch's resident KV state
     is the shared page pool plus per-lane page tables sized to actual token
@@ -490,7 +491,13 @@ def decode_step_paged(
     trimmed to fewer pages than the lanes' full width (the batched server's
     page-width bucketing): the layout invariant (slot == position) makes
     attention over the trimmed width identical as long as every lane's
-    tokens fit in it."""
+    tokens fit in it.
+
+    ``shared_pages`` (pallas path only, ignored by the reference path):
+    a run of physical pages every lane's table starts with — the kernel
+    attends them once per unique page for the whole batch instead of once
+    per lane (docs/architecture.md, "Cross-session shared-prefix
+    paging")."""
     b = tokens.shape[0]
     pos1 = pos[:, None].astype(jnp.int32)
     positions = (
@@ -523,7 +530,7 @@ def decode_step_paged(
                 bp, pk, pv = scanned
                 x, nk, nv = _fn(
                     bp, x, positions, pk, pv, page_table, new_kv_pos, cfg,
-                    0, page_size,
+                    0, page_size, shared_pages=shared_pages,
                 )
                 return x, (nk, nv)
         else:

@@ -161,7 +161,18 @@ def prime_session_pool(
             return True, False          # already warm (covers everything)
         else:
             usable = lcp                # == entry.pos: extend the delta
-    if pool.allocator is not None and pool.allocator.n_free < pool.allocator.pages_for(n):
+    # Cross-session shared prefix: another session's resident pages matching
+    # this context shrink both the prefill (gather + delta instead of full)
+    # and the page budget the final put will need (its store shares them).
+    shared_pages: List[int] = []
+    stok = 0
+    if pool.allocator is not None:
+        shared_pages = pool.allocator.match_prefix(token_ids, n)
+        stok = len(shared_pages) * pool.allocator.page_size
+    if pool.allocator is not None and (
+        pool.allocator.n_free
+        < pool.allocator.pages_for(n) - len(shared_pages)
+    ):
         return False, False
     if usable > 0:
         base = (
@@ -169,6 +180,11 @@ def prime_session_pool(
             if entry.paged else entry.caches
         )
         _, caches, _ = append_fn(base, token_ids[usable:], usable)
+    elif stok > 0:
+        base = pool.allocator.gather(shared_pages, stok, max_len)
+        _, caches, _ = append_fn(base, token_ids[stok:], stok)
+        pool.shared_hits += 1
+        pool.shared_tokens += stok
     else:
         _, caches, _ = prefill_fn(token_ids)
     caches = trim_cache_prefix(caches, n)
@@ -229,6 +245,7 @@ class InferenceEngine:
         session_cache_capacity: int = 4,
         page_size: int = 0,
         kv_pages: int = 0,
+        share_prefixes: bool = True,
     ) -> "InferenceEngine":
         """With ``page_size``/``kv_pages`` > 0, the session pool stores its
         entries *paged* (docs/architecture.md, "Paged session KV"): each
@@ -248,7 +265,8 @@ class InferenceEngine:
 
             assert max_len % page_size == 0, (max_len, page_size)
             pool.allocator = PagedKVAllocator(
-                cfg, page_size=page_size, n_pages=kv_pages
+                cfg, page_size=page_size, n_pages=kv_pages,
+                share_prefixes=share_prefixes,
             )
             # pages are the memory bound now; lift the entry-count cap so
             # it can never evict before the page budget does (every entry
@@ -365,7 +383,25 @@ class InferenceEngine:
         entry, usable = (None, 0)
         if pool is not None:
             entry, usable = pool.match(cache_key, input_ids)
-        if entry is not None and usable > 0:
+        shared_pages: List[int] = []
+        stok = 0
+        if pool is not None and pool.allocator is not None:
+            # cross-session shared prefix: resident pages of ANY session
+            # whose content matches this context (docs/architecture.md,
+            # "Cross-session shared-prefix paging")
+            shared_pages, stok = pool.match_shared_prefix(input_ids)
+        if stok > usable:
+            # another session's pages cover more than this key's own entry:
+            # gather them to a dense base (read-only copy — the donor pages
+            # are never written) and prefill only the remainder
+            base = pool.allocator.gather(shared_pages, stok, self.max_len)
+            logits, caches, pos = self._append_prefill(
+                base, input_ids[stok:], stok
+            )
+            hit, reused, warm = True, stok, False
+            pool.shared_hits += 1
+            pool.shared_tokens += stok
+        elif entry is not None and usable > 0:
             if entry.paged:
                 # paged entry: gather the pages into a fresh dense view with
                 # kv_pos already masked to `usable` (covers the retry/resend
@@ -493,11 +529,13 @@ class JaxLLMService:
         session_cache_capacity: int = 4,
         page_size: int = 0,
         kv_pages: int = 0,
+        share_prefixes: bool = True,
     ) -> "JaxLLMService":
         engine = InferenceEngine.create(
             cfg, seed=seed, max_len=max_len,
             session_cache_capacity=session_cache_capacity if kv_reuse else 0,
             page_size=page_size, kv_pages=kv_pages,
+            share_prefixes=share_prefixes,
         )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, engine=engine, tokenizer=tok, kv_reuse=kv_reuse)

@@ -26,10 +26,23 @@ lane's tail is always exclusively held), and finished-slot write-back
 directions. Page id 0 is reserved as a scratch page: table padding and
 inactive batch lanes point at it, and anything written there is garbage by
 design, masked via kv_pos.
+
+Cross-session sharing (:class:`PrefixPageIndex`): beyond the session-key
+boundary, every *full* page at rest is indexed by a chained content hash of
+the token prefix it holds, so an admission for ANY session can discover and
+share the resident pages of any other session's identical prefix — one
+system prompt, a million tenants, one physical copy. The index holds no
+references: a page's mapping is dropped the moment its refcount reaches
+zero (``decref``), so the index can never name a released page. Sharing is
+copy-on-write by construction — shared pages are never written (admission
+write-through skips them via ``n_skip``; divergence or a partial tail
+always lands in a fresh exclusively-held page), so a sharer can never
+observe another tenant's subsequent writes.
 """
 
 from __future__ import annotations
 
+import hashlib
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
@@ -43,6 +56,74 @@ from ..models.cache import init_paged_pool
 # Physical page 0 is never allocated: page-table padding points here and
 # inactive decode lanes write here. Its contents are garbage by design.
 SCRATCH_PAGE = 0
+
+
+def page_digests(
+    token_ids: Sequence[int], page_size: int, limit: Optional[int] = None
+) -> List[bytes]:
+    """Chained content digests of the page-aligned full blocks of
+    ``token_ids``: digest ``i`` commits to tokens ``[0, (i+1)*page_size)``,
+    not just block ``i``, so two sequences share digest ``i`` iff their
+    entire prefixes through page ``i`` are identical — exactly the
+    condition under which their KV pages are interchangeable (KV depends on
+    the full causal prefix and absolute positions, and the paged layout
+    pins slot == position). Only *full* pages are digested; a partial tail
+    page is never shareable. ``limit`` caps the number of digests."""
+    n_full = len(token_ids) // page_size
+    if limit is not None:
+        n_full = min(n_full, max(0, limit))
+    out: List[bytes] = []
+    h = hashlib.blake2b(digest_size=16)
+    for i in range(n_full):
+        block = np.asarray(
+            token_ids[i * page_size : (i + 1) * page_size], np.int64
+        )
+        h.update(block.tobytes())
+        out.append(h.digest())
+    return out
+
+
+class PrefixPageIndex:
+    """Content-hash index over resident full pages: chained prefix digest
+    -> physical page id. Weak by design — registering takes no page
+    reference; the allocator drops a page's mapping when its refcount hits
+    zero, so a lookup can never return a released (or recycled) page. One
+    digest maps to at most one page and one page to at most one digest
+    (first writer wins: duplicate content admitted before sharing kicked in
+    simply stays unshared until its mapping's page is released)."""
+
+    def __init__(self) -> None:
+        self._by_digest: Dict[bytes, int] = {}
+        self._by_page: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_digest)
+
+    def register(self, digest: bytes, page: int) -> None:
+        if digest in self._by_digest or page in self._by_page:
+            return
+        self._by_digest[digest] = page
+        self._by_page[page] = digest
+
+    def lookup_run(self, digests: Sequence[bytes]) -> List[int]:
+        """Longest indexed run of consecutive prefix digests, as physical
+        page ids (no references taken — the caller must incref before any
+        operation that could release them)."""
+        pages: List[int] = []
+        for d in digests:
+            p = self._by_digest.get(d)
+            if p is None:
+                break
+            pages.append(p)
+        return pages
+
+    def drop_page(self, page: int) -> None:
+        d = self._by_page.pop(page, None)
+        if d is not None:
+            del self._by_digest[d]
+
+    def pages(self) -> List[int]:
+        return list(self._by_page)
 
 
 class PagedKVAllocator:
@@ -64,6 +145,7 @@ class PagedKVAllocator:
         page_size: int = 16,
         n_pages: int = 256,
         dtype=None,
+        share_prefixes: bool = True,
     ) -> None:
         assert supports_append(cfg), (
             "paged KV requires full-cache dense/moe groups "
@@ -73,6 +155,8 @@ class PagedKVAllocator:
         self.cfg = cfg
         self.page_size = page_size
         self.n_pages = n_pages
+        self.share_prefixes = share_prefixes
+        self.index = PrefixPageIndex()
         self.pools: List[Dict[str, jnp.ndarray]] = [
             init_paged_pool(cfg, spec.n_blocks, n_pages, page_size, dtype)
             for spec in layer_groups(cfg)
@@ -140,7 +224,37 @@ class PagedKVAllocator:
             assert p != SCRATCH_PAGE and self._ref[p] > 0, p
             self._ref[p] -= 1
             if self._ref[p] == 0:
+                # released pages must leave the content index immediately:
+                # the page may be recycled for arbitrary new content, and
+                # the index must never name a page nobody holds
+                self.index.drop_page(p)
                 self._free.append(p)
+
+    # -- cross-session prefix sharing -----------------------------------
+    def match_prefix(
+        self, token_ids: Sequence[int], max_tokens: Optional[int] = None
+    ) -> List[int]:
+        """Longest run of resident full prefix pages matching ``token_ids``
+        byte-for-byte (chained content hash), across *every* session. At
+        most ``max_tokens`` leading tokens are considered. Returns physical
+        page ids with NO references taken — incref before anything that
+        could evict their owners."""
+        if not self.share_prefixes or not token_ids:
+            return []
+        n = len(token_ids) if max_tokens is None else min(len(token_ids), max_tokens)
+        return self.index.lookup_run(
+            page_digests(token_ids, self.page_size, n // self.page_size)
+        )
+
+    def register_pages(self, token_ids: Sequence[int], pages: Sequence[int]) -> None:
+        """Index the *full* pages of an at-rest sequence for cross-session
+        matching (no-op per page if its content is already indexed). Only
+        call for pages whose bytes are final — entry storage and finished
+        slot write-back, never a live lane's tail."""
+        if not self.share_prefixes:
+            return
+        for d, p in zip(page_digests(token_ids, self.page_size), pages):
+            self.index.register(d, p)
 
     # -- layout moves (jitted once per dense width) ---------------------
     def table_for(self, pages: Sequence[int], width: int) -> np.ndarray:
@@ -200,21 +314,43 @@ class PagedKVAllocator:
             self._gather_fns[width] = fn
         return self._gather_fns[width]
 
-    def write_through(self, pages: Sequence[int], dense: List[Dict]) -> None:
+    def write_through(
+        self, pages: Sequence[int], dense: List[Dict], n_skip: int = 0
+    ) -> None:
         """Scatter a dense B=1 lane (width = pages' span, scratch-padded)
-        into ``pages``. The lane width must be a page_size multiple."""
+        into ``pages``. The lane width must be a page_size multiple.
+        ``n_skip`` leading pages are NOT written (their table slots are
+        redirected to the scratch page): shared prefix pages are read-only
+        for every sharer — that is the copy-on-write guarantee — and their
+        bytes are already exactly what the dense lane holds there."""
         width = int(dense[0]["k"].shape[2])
-        table = jnp.asarray(self.table_for(pages, width))
-        self.pools = self._scatter_fn(width)(self.pools, dense, table)
+        table = self.table_for(pages, width)
+        table[: min(n_skip, len(pages))] = SCRATCH_PAGE
+        self.pools = self._scatter_fn(width)(self.pools, dense, jnp.asarray(table))
 
-    def store(self, dense: List[Dict], n_tokens: int) -> Optional[List[int]]:
-        """Allocate pages for ``n_tokens`` and write the dense lane through.
-        Returns the page list (caller owns the refs), or None when the pool
-        is out of pages."""
-        pages = self.alloc(self.pages_for(n_tokens))
-        if pages is None:
+    def store(
+        self, dense: List[Dict], n_tokens: int,
+        token_ids: Optional[Sequence[int]] = None,
+    ) -> Optional[List[int]]:
+        """Page an at-rest dense lane: share any resident prefix pages whose
+        content matches ``token_ids`` (cross-session, incref — the write is
+        skipped for them), allocate fresh pages for the rest, write the lane
+        through, and index the stored full pages. Returns the page list
+        (caller owns one ref per page), or None when the pool can't supply
+        the fresh pages — shared refs are released again in that case."""
+        shared = self.match_prefix(token_ids, n_tokens) if token_ids else []
+        if shared:
+            self.incref(shared)
+        fresh = self.alloc(self.pages_for(n_tokens) - len(shared))
+        if fresh is None:
+            if shared:
+                self.decref(shared)
             return None
-        self.write_through(pages, dense)
+        pages = shared + fresh
+        if fresh:
+            self.write_through(pages, dense, n_skip=len(shared))
+        if token_ids is not None:
+            self.register_pages(token_ids, pages)
         return pages
 
     def gather(
@@ -239,4 +375,5 @@ class PagedKVAllocator:
             "page_bytes": self.page_bytes,
             "resident_kv_bytes": self.resident_kv_bytes,
             "total_kv_bytes": self.total_kv_bytes,
+            "indexed_pages": len(self.index),
         }

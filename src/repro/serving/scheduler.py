@@ -99,6 +99,7 @@ class BatchedServer:
         paged: bool = False,
         page_size: int = 16,
         kv_pages: Optional[int] = None,
+        share_prefixes: bool = True,
     ) -> None:
         assert cfg.attn_variant == "full" and cfg.arch_type in ("dense", "moe", "vlm"), (
             "batched server currently supports full-cache attention archs"
@@ -129,7 +130,8 @@ class BatchedServer:
                 cap = session_pool.capacity if session_pool is not None else 0
                 kv_pages = 1 + (n_slots + cap) * (max_len // page_size)
             self.allocator = PagedKVAllocator(
-                cfg, page_size=page_size, n_pages=kv_pages
+                cfg, page_size=page_size, n_pages=kv_pages,
+                share_prefixes=share_prefixes,
             )
             if session_pool is not None:
                 assert session_pool.allocator is None, (
@@ -148,9 +150,11 @@ class BatchedServer:
             self._kv_pos = jnp.full((n_slots, max_len), -1, jnp.int32)
 
             @partial(jax.jit, donate_argnums=(1, 3))
-            def _decode_paged(params, pools, table, kv_pos, tokens, pos):
+            def _decode_paged(params, pools, table, kv_pos, tokens, pos,
+                              shared_pages=None):
                 return decode_step_paged(
-                    params, cfg, pools, table, kv_pos, tokens, pos
+                    params, cfg, pools, table, kv_pos, tokens, pos,
+                    shared_pages,
                 )
 
             self._decode_paged = _decode_paged
@@ -272,7 +276,7 @@ class BatchedServer:
             admitted = self._admit_paged(idx, ids, entry, usable, cache_key)
             if admitted is None:
                 return False
-            logits, pos, usable = admitted
+            logits, pos, usable, warm = admitted
         else:
             if entry is not None and usable > 0:
                 if entry.paged:
@@ -301,8 +305,8 @@ class BatchedServer:
                         merged[k] = self._put_entry(big[k], small[k], idx, k)
                 new_caches.append(merged)
             self.caches = new_caches
+            warm = entry is not None and usable > 0 and entry.source == "prime"
 
-        warm = entry is not None and usable > 0 and entry.source == "prime"
         self._pos = self._pos.at[idx].set(int(pos[0]))
         self._next_tok[idx] = int(jnp.argmax(logits[0]))
         self.slots[idx] = SlotState(
@@ -360,7 +364,17 @@ class BatchedServer:
         exclusively-held one,
         allocate fresh pages for the suffix, run the (dense, transient)
         suffix prefill, and write the lane through to the slot's pages.
-        Returns (logits, pos, usable) or None when pages can't be found.
+        Returns (logits, pos, usable, warm) or None when pages can't be
+        found.
+
+        Before the key path, the cross-session content-hash index is
+        consulted: when ANY resident session's pages cover more of this
+        request than the key's own entry, those pages are shared instead
+        (docs/architecture.md, "Cross-session shared-prefix paging"). The
+        cross run is full pages only, so it is page-aligned and needs no
+        tail swap; shared pages are never written (``n_skip`` redirects
+        their write-through slots to the scratch page) — copy-on-write by
+        construction.
 
         A feasibility check runs first: if the fresh pages needed exceed
         free + genuinely reclaimable (refcount-1 entry pages, donor
@@ -371,30 +385,46 @@ class BatchedServer:
         alloc, pool = self.allocator, self.session_pool
         ps = alloc.page_size
         n = len(ids)
-        n_shared = alloc.pages_for(usable) if (entry is not None and usable > 0) else 0
-        cow = 1 if (n_shared and usable % ps) else 0
+        # capped at n-1 tokens so admission always computes last-token
+        # logits; the run beats the key path only if strictly longer
+        cross = alloc.match_prefix(ids, n - 1)
+        if len(cross) * ps > usable:
+            entry, usable = None, len(cross) * ps
+        else:
+            cross = []
+        warm = entry is not None and usable > 0 and entry.source == "prime"
+        n_shared = alloc.pages_for(usable) if usable > 0 else 0
+        cow = 1 if (entry is not None and usable % ps) else 0
         fresh_needed = cow + max(0, alloc.pages_for(n + 1) - n_shared)
         if fresh_needed > alloc.n_free + self._reclaimable_pages(cache_key):
             return None
         pages: List[int] = []
-        if entry is not None and usable > 0:
+        skip = 0  # leading shared pages the write-through must not touch
+        if cross:
+            # incref BEFORE any reclaim (_alloc_pages below): eviction of
+            # the donor entry must not release pages we are about to share
+            alloc.incref(cross)
+            pages, skip = list(cross), len(cross)
+        elif entry is not None and usable > 0:
             shared = list(entry.pages[: alloc.pages_for(usable)])
             alloc.incref(shared)
+            skip = len(shared)
             if usable % ps:
                 # the tail page is partially filled: this slot will append
                 # into it, and the donor entry (or a concurrent admission
                 # for the same key) still references it — swap in a fresh
                 # page so an active lane's tail page is always exclusively
                 # held. No byte copy needed: write_through below rewrites
-                # the whole lane (tail-page prefix included) from the dense
-                # view gathered off the donor.
+                # the swapped page (tail-page prefix included) from the
+                # dense view gathered off the donor.
                 fresh = self._alloc_pages(1, exclude=cache_key)
                 if fresh is None:
                     alloc.decref(shared)
-                    shared, usable = [], 0
+                    shared, usable, skip, warm = [], 0, 0, False
                 else:
                     alloc.decref(shared[-1:])
                     shared[-1] = fresh[0]
+                    skip = len(shared) - 1
             pages = shared
         else:
             usable = 0
@@ -410,16 +440,55 @@ class BatchedServer:
                 return None
             pages += fresh
 
-        if usable > 0:
+        if cross:
+            base = alloc.gather(cross, usable, self.max_len)
+            logits, dense, pos = self._append_suffix(base, ids[usable:], usable)
+            if pool is not None:
+                pool.shared_hits += 1
+                pool.shared_tokens += usable
+        elif usable > 0:
             base = pool.materialize(entry, usable, self.max_len)
             logits, dense, pos = self._append_suffix(base, ids[usable:], usable)
         else:
             logits, dense, pos = self._bucketed_prefill(ids)
-        alloc.write_through(pages, dense)
+        alloc.write_through(pages, dense, n_skip=skip)
+        # index this slot's *full* prefix pages right away (not at
+        # write-back): later admissions in the same wave — 32 tenants with
+        # one system prompt arriving together — share them while the slot
+        # still decodes. Full pages of the admitted prefix are final (decode
+        # writes land at pos >= n, in the exclusively-held tail or beyond).
+        alloc.register_pages(ids, pages)
         self.slot_pages[idx] = pages
         self._table[idx, :] = alloc.table_for(pages, self.max_len)
         self._kv_pos = self._kv_pos.at[idx].set(dense[0]["kv_pos"][0])
-        return logits, pos, usable
+        return logits, pos, usable, warm
+
+    def _shared_prefix_run(self, width: int) -> List[int]:
+        """Longest run of leading pages IDENTICAL across every active
+        lane's table, power-of-two bucketed (down) so the shared-pass
+        kernel compiles at most log2(MP) shapes, and capped below ``width``
+        so the per-lane suffix grid keeps >= 1 page. Identical page ids
+        across >= 2 lanes means refcount >= 2, hence inside every holder's
+        read-only shared region (a lane's writable tail page is exclusively
+        held by construction) — so the run is stable for the whole step and
+        holds positions [0, run*page_size) for every lane."""
+        active = [
+            self.slot_pages[i]
+            for i, s in enumerate(self.slots) if s is not None
+        ]
+        if len(active) < 2:
+            return []
+        first = active[0]
+        limit = min(min(len(p) for p in active), width - 1)
+        run = 0
+        while run < limit and all(p[run] == first[run] for p in active[1:]):
+            run += 1
+        if run == 0:
+            return []
+        b = 1
+        while b * 2 <= run:
+            b *= 2
+        return first[:b]
 
     def _append_suffix(self, caches, suffix_ids: List[int], p0: int):
         """Chunk-prefill ``suffix_ids`` into B=1 ``caches`` starting at p0
@@ -574,18 +643,27 @@ class BatchedServer:
             while w < max(1, need):
                 w *= 2
             w = min(w, mp)
+            # cross-session shared-prefix split (pallas only — the
+            # reference path's gathered view has no per-page DMA to save):
+            # pages every active lane starts with are attended once per
+            # unique page for the whole batch instead of once per lane
+            sp = None
+            if self.cfg.attn_impl == "pallas":
+                run = self._shared_prefix_run(w)
+                if run:
+                    sp = jnp.asarray(np.asarray(run, np.int32))
             if w < mp:
                 wp = w * ps
                 logits, pools, kvp = self._decode_paged(
                     self.params, self.allocator.pools,
                     jnp.asarray(self._table[:, :w]),
-                    self._kv_pos[:, :wp], tokens, self._pos,
+                    self._kv_pos[:, :wp], tokens, self._pos, sp,
                 )
                 self._kv_pos = self._kv_pos.at[:, :wp].set(kvp)
             else:
                 logits, pools, self._kv_pos = self._decode_paged(
                     self.params, self.allocator.pools, jnp.asarray(self._table),
-                    self._kv_pos, tokens, self._pos,
+                    self._kv_pos, tokens, self._pos, sp,
                 )
             self.allocator.pools = pools
         else:
@@ -717,6 +795,7 @@ class BatchedLLMService:
         paged: bool = False,
         page_size: int = 16,
         kv_pages: Optional[int] = None,
+        share_prefixes: bool = True,
     ) -> "BatchedLLMService":
         params = init_params(jax.random.key(seed), cfg)
         pool = (
@@ -727,7 +806,7 @@ class BatchedLLMService:
         server = BatchedServer(
             cfg, params, n_slots=n_slots, max_len=max_len, session_pool=pool,
             paged=paged and supports_append(cfg), page_size=page_size,
-            kv_pages=kv_pages,
+            kv_pages=kv_pages, share_prefixes=share_prefixes,
         )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, server=server, tokenizer=tok)

@@ -89,6 +89,12 @@ class SessionCachePool:
     invalidations: int = 0
     primes: int = 0  # warm-start installs/extensions via InferenceEngine.prime
     rejects: int = 0  # paged inserts dropped for lack of page budget
+    # cross-session shared-prefix accounting: admissions that reused another
+    # session's resident pages via the content-hash index (bumped by the
+    # serving paths that consume match_shared_prefix), and the tokens they
+    # did not have to re-prefill / re-store
+    shared_hits: int = 0
+    shared_tokens: int = 0
     allocator: Optional["PagedKVAllocator"] = None
     _entries: "OrderedDict[str, CacheEntry]" = field(
         default_factory=OrderedDict, repr=False
@@ -132,6 +138,21 @@ class SessionCachePool:
         self.hits += 1
         return entry, usable
 
+    def match_shared_prefix(self, token_ids: Sequence[int]) -> Tuple[List[int], int]:
+        """Cross-session admission match: the longest resident full-page run
+        whose content-hash chain matches the head of ``token_ids``, over
+        *every* session's pages (docs/architecture.md, "Cross-session
+        shared-prefix paging"). Returns ``(pages, n_tokens)`` with
+        ``n_tokens == len(pages) * page_size``; at least one incoming token
+        is always left to (re)compute so the caller gets last-position
+        logits. No references are taken and no LRU/hit state is touched —
+        callers incref (batched path) or gather immediately (single-stream
+        path) and bump ``shared_hits``/``shared_tokens`` on actual use."""
+        if self.allocator is None or not self.allocator.share_prefixes:
+            return [], 0
+        pages = self.allocator.match_prefix(token_ids, len(token_ids) - 1)
+        return pages, len(pages) * self.allocator.page_size
+
     def put(self, key: str, entry: CacheEntry, low_priority: bool = False) -> None:
         """Insert/replace an entry. With an ``allocator``, a dense entry is
         paged on the way in (an already-paged entry — the batched server's
@@ -153,7 +174,14 @@ class SessionCachePool:
             return
         if self.allocator is not None and not entry.paged:
             assert entry.caches is not None
-            needed = self.allocator.pages_for(entry.pos)
+            # Pin any cross-session prefix match BEFORE reclaiming: eviction
+            # of the donor entry must not release pages we are about to
+            # share (incref-before-reclaim ordering). The pin also keeps the
+            # index mappings alive, so store() below re-finds the same run.
+            shared = self.allocator.match_prefix(entry.token_ids, entry.pos)
+            if shared:
+                self.allocator.incref(shared)
+            needed = self.allocator.pages_for(entry.pos) - len(shared)
             if self.allocator.n_free < needed and not low_priority:
                 old = self._entries.get(key)
                 if old is not None and old.paged:
@@ -168,15 +196,22 @@ class SessionCachePool:
                     del self._entries[key]
                 self.reclaim(needed, exclude=key)
             pages = (
-                self.allocator.store(entry.caches, entry.pos)
+                self.allocator.store(entry.caches, entry.pos, entry.token_ids)
                 if self.allocator.n_free >= needed else None
             )
+            if shared:
+                self.allocator.decref(shared)  # store took its own refs
             if pages is None:
                 self.rejects += 1
                 return  # best effort: the existing entry (if any) stays
             entry = CacheEntry(
                 token_ids=entry.token_ids, source=entry.source, pages=pages
             )
+        elif self.allocator is not None and entry.paged:
+            # adopted write-back pages are at rest now — index their full
+            # pages so later admissions of the same prefix can share them
+            # (no-op for pages that came from the index in the first place)
+            self.allocator.register_pages(entry.token_ids, entry.pages)
         old = self._entries.get(key)
         existed = old is not None
         self._entries[key] = entry
@@ -266,4 +301,13 @@ class SessionCachePool:
             s["rejects"] = self.rejects
             s["pages_in_use"] = self.pages_in_use
             s["free_pages"] = self.allocator.n_free
+            # cross-session sharing: logical pages held vs distinct physical
+            # pages backing them — the gap is the storage dedup win
+            uniq: set = set()
+            for e in self._entries.values():
+                if e.paged:
+                    uniq.update(e.pages)
+            s["unique_pages"] = len(uniq)
+            s["shared_hits"] = self.shared_hits
+            s["shared_tokens"] = self.shared_tokens
         return s

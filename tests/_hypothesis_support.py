@@ -1,0 +1,61 @@
+"""Graceful degradation for hypothesis-based tests.
+
+The property-test modules used to open with a module-level
+``pytest.importorskip("hypothesis")``, which skipped the ENTIRE module —
+including deterministic unit tests that never touch hypothesis — whenever
+the optional dependency was missing. That masked real regressions behind
+a single opaque "module skipped" line.
+
+This shim keeps the dependency optional while letting deterministic tests
+run everywhere:
+
+- hypothesis installed: re-exports the real ``given``/``settings``/``st``.
+- hypothesis missing: ``@given(...)`` replaces the test with one that
+  skips with an explicit reason, ``@settings(...)`` is the identity, and
+  ``st`` is a stub whose attribute accesses / calls all return the stub
+  so module-level strategy definitions still evaluate.
+
+Import as ``from _hypothesis_support import HAVE_HYPOTHESIS, given,
+settings, st`` instead of importing hypothesis directly.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategy:
+        """Absorbs any strategy-construction expression (st.lists(st.integers(0, 5)),
+        st.text(alphabet=...), strategy.map(f), a | b, ...) without executing it."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        def __ror__(self, other):
+            return self
+
+    st = _StubStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (requirements-dev.txt)"
+        )
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

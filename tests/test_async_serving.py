@@ -255,6 +255,7 @@ def tiny_cfg():
     )
 
 
+@pytest.mark.slow
 def test_batched_service_shares_decode_batch(tiny_cfg):
     """Concurrent tenants on one node ride the same continuous decode
     batch (Timing.batch_size > 1) and their outputs match the single-stream
@@ -291,6 +292,7 @@ def test_batched_service_shares_decode_batch(tiny_cfg):
         assert ref.chat(f"question {i} about robots", "a").text == r.text
 
 
+@pytest.mark.slow
 def test_batched_service_session_kv_reuse_second_turn(tiny_cfg):
     """Turn 2 of each concurrent session prefix-matches the KV state its
     turn 1 wrote back to the shared pool: suffix-only prefill."""
@@ -321,6 +323,7 @@ def test_batched_service_session_kv_reuse_second_turn(tiny_cfg):
             second.n_context_tokens
 
 
+@pytest.mark.slow
 def test_overlong_context_on_async_path_truncates(tiny_cfg):
     """Regression: a context longer than the server's cache submitted via
     the async BatchedLLMService.submit path must degrade by truncation
@@ -348,6 +351,7 @@ def test_overlong_context_on_async_path_truncates(tiny_cfg):
     assert t2.response.error is None
 
 
+@pytest.mark.slow
 def test_batched_service_prime_warm_start(tiny_cfg):
     """BatchedServer.prime pre-warms the pool so a roaming session's first
     batched turn reuses the replicated context's KV (kv_warm_start)."""

@@ -10,8 +10,7 @@ think times) and assert the system's invariants:
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core import (
     ConsistencyPolicy,

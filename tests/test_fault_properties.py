@@ -7,8 +7,7 @@ a failing benchmark run can be replayed bit-for-bit from its plan.
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.edge import EchoLLMService, EdgeCluster, LLMClient
 from repro.store import DegradedWindow, FaultPlan, Link, PartitionWindow

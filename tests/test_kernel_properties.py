@@ -6,10 +6,7 @@ import jax
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
-)
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.paged_attention import paged_attention, paged_attention_ref

@@ -182,6 +182,7 @@ def test_paged_window_softcap(window, softcap):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_paged_empty_lane_is_zero():
     """A lane with no valid key must produce exact zeros — the only answer
     independent of how many pages the bounded grid visits (the gather
@@ -217,6 +218,7 @@ def test_paged_matches_gather_plus_decode_kernel():
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_paged_mrope_positions():
     """attention_decode_paged with M-RoPE positions: the kernel consumes the
     rope'd q, so the pallas path must match the gather reference exactly
@@ -262,6 +264,142 @@ def test_paged_full_matrix(ps, H, KV, Dh, window):
 
 
 # ---------------------------------------------------------------------------
+# shared-prefix (cascade) paged attention
+# ---------------------------------------------------------------------------
+def _shared_paged_inputs(key, n_shared, suffix_lens, ps, H, KV, Dh,
+                         dtype=jnp.float32):
+    """Pool + page tables where every lane's first ``n_shared`` pages are
+    the SAME physical pages (a cross-session shared prefix) and each lane
+    owns fresh pages for its ragged suffix. Lane bi holds
+    ``n_shared * ps + suffix_lens[bi]`` tokens. Returns the per-lane kernel
+    args plus the shared-page run to hand to the fused cascade path."""
+    B = len(suffix_lens)
+    pages_of = lambda n: -(-n // ps)
+    mp = n_shared + max(pages_of(n) for n in suffix_lens)
+    mp = max(mp, n_shared)
+    n_pages = 1 + n_shared + sum(pages_of(n) for n in suffix_lens)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, Dh), dtype)
+    pool_k = jax.random.normal(ks[1], (n_pages, ps, KV, Dh), dtype)
+    pool_v = jax.random.normal(ks[2], (n_pages, ps, KV, Dh), dtype)
+    shared = list(range(1, 1 + n_shared))
+    table = np.zeros((B, mp), np.int32)
+    kvpos = np.full((B, mp * ps), -1, np.int32)
+    used = 1 + n_shared
+    for bi, sfx in enumerate(suffix_lens):
+        n = n_shared * ps + sfx
+        table[bi, :n_shared] = shared
+        for pj in range(pages_of(sfx)):
+            table[bi, n_shared + pj] = used
+            used += 1
+        kvpos[bi, :n] = np.arange(n)
+    q_pos = jnp.asarray(
+        [[n_shared * ps + sfx - 1] for sfx in suffix_lens], jnp.int32
+    )
+    return (
+        q, pool_k, pool_v, jnp.asarray(table), q_pos, jnp.asarray(kvpos),
+        jnp.asarray(shared, jnp.int32),
+    )
+
+
+def _assert_shared_prefix_equiv(args, sp, window=0, softcap=0.0):
+    """The cascade path (one shared-prefix pass + per-lane suffix pass
+    merged via online-softmax stats) vs the single-pass per-lane kernel vs
+    the pure-jnp oracle. The two kernel executions reorder nothing — the
+    suffix pass CONTINUES the shared pass's running (acc, m, l) — so they
+    must agree bit-for-bit, not just numerically."""
+    fused = paged_attention(*args, sp, window=window, softcap=softcap)
+    per_lane = paged_attention(*args, window=window, softcap=softcap)
+    ref = paged_attention_ref(*args, window=window, softcap=softcap)
+    assert jnp.array_equal(fused, per_lane), "cascade != single-pass"
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(ref), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_shared_prefix_ragged_suffixes():
+    """Fast gate: 2 shared pages, suffixes covering zero-length (q inside
+    the shared run), single token, page boundary, and multi-page."""
+    *args, sp = _shared_paged_inputs(
+        jax.random.key(10), 2, (0, 1, 16, 19), 16, 4, 2, 32
+    )
+    _assert_shared_prefix_equiv(tuple(args), sp)
+
+
+@pytest.mark.slow
+def test_shared_prefix_all_lanes_identical():
+    """Every lane is the same sequence (suffix 0, table width == run
+    length): start clamps to mp - 1 so the suffix pass still owns the last
+    page, and outputs must match lanes that never shared at all."""
+    *args, sp = _shared_paged_inputs(
+        jax.random.key(11), 3, (0, 0, 0), 8, 4, 2, 16
+    )
+    _assert_shared_prefix_equiv(tuple(args), sp)
+
+
+@pytest.mark.slow
+def test_shared_prefix_window_cuts_into_run():
+    """A sliding window smaller than the shared prefix: the shared pass
+    must mask positions outside [q_pos - window, q_pos] even though every
+    lane reads the same pages."""
+    *args, sp = _shared_paged_inputs(
+        jax.random.key(12), 3, (2, 9), 8, 4, 2, 16
+    )
+    _assert_shared_prefix_equiv(tuple(args), sp, window=11)
+    _assert_shared_prefix_equiv(tuple(args), sp, softcap=8.0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ps", [8, 16, 64])
+@pytest.mark.parametrize("H,KV,Dh", [(4, 4, 16), (8, 2, 32), (4, 1, 32)])
+@pytest.mark.parametrize("n_shared", [1, 3])
+def test_shared_prefix_full_matrix(ps, H, KV, Dh, n_shared):
+    """Exhaustive cascade matrix: MHA/GQA/MQA x page size x shared-run
+    length over ragged suffixes (zero-length, sub-page, boundary,
+    multi-page) — the shared-prefix complement of test_paged_full_matrix."""
+    suffixes = (0, 1, ps - 1, ps, 2 * ps + 3)
+    *args, sp = _shared_paged_inputs(
+        jax.random.key(13), n_shared, suffixes, ps, H, KV, Dh
+    )
+    _assert_shared_prefix_equiv(tuple(args), sp)
+    _assert_shared_prefix_equiv(tuple(args), sp, window=ps + 3)
+
+
+def test_attention_decode_paged_shared_matches_reference():
+    """Model layer: attention_decode_paged with a shared-page run (pallas
+    cascade) == without (per-lane kernel) == gather reference — the fallback
+    stays bit-compatible whether or not sharing is plumbed through."""
+    from repro.models import ModelConfig
+    from repro.models.attention import attention_decode_paged, init_attention
+
+    cfg = ModelConfig(
+        name="shared-paged", arch_type="dense", n_layers=1, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    p = init_attention(jax.random.key(14), cfg)
+    _, pool_k, pool_v, table, q_pos, kv_pos, sp = _shared_paged_inputs(
+        jax.random.key(15), 2, (3, 12), 8, cfg.n_heads, cfg.n_kv_heads,
+        cfg.d_head,
+    )
+    x = jax.random.normal(jax.random.key(16), (2, 1, cfg.d_model))
+    kcfg = cfg.replace(attn_impl="pallas")
+    out_shared = attention_decode_paged(
+        p, x, q_pos, pool_k, pool_v, table, kv_pos, kcfg, shared_pages=sp
+    )
+    out_kernel = attention_decode_paged(
+        p, x, q_pos, pool_k, pool_v, table, kv_pos, kcfg
+    )
+    out_ref = attention_decode_paged(
+        p, x, q_pos, pool_k, pool_v, table, kv_pos, cfg, shared_pages=sp
+    )
+    assert jnp.array_equal(out_shared, out_kernel)
+    np.testing.assert_allclose(
+        np.asarray(out_shared), np.asarray(out_ref), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
 # SSD
 # ---------------------------------------------------------------------------
 def _ssd_inputs(key, B, L, H, P, N):
@@ -278,12 +416,15 @@ def _ssd_inputs(key, B, L, H, P, N):
     "L,chunk",
     [
         (32, 8),
-        (64, 16),
+        pytest.param(64, 16, marks=pytest.mark.slow),
         pytest.param(64, 64, marks=pytest.mark.slow),   # single-chunk limit
         pytest.param(48, 16, marks=pytest.mark.slow),   # ragged tail
     ],
 )
-@pytest.mark.parametrize("H,P,N", [(2, 16, 8), (4, 32, 16)])
+@pytest.mark.parametrize(
+    "H,P,N",
+    [(2, 16, 8), pytest.param(4, 32, 16, marks=pytest.mark.slow)],
+)
 def test_ssd_sweep(L, chunk, H, P, N):
     x, dt, A, Bv, Cv = _ssd_inputs(jax.random.key(0), 2, L, H, P, N)
     y_seq, f_seq = ssd_sequential(x, dt, A, Bv, Cv)
@@ -292,6 +433,7 @@ def test_ssd_sweep(L, chunk, H, P, N):
     np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_seq), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_chunk_invariance():
     """Same result for any chunking — the SSD decomposition's core property."""
     x, dt, A, Bv, Cv = _ssd_inputs(jax.random.key(1), 1, 48, 2, 16, 8)
@@ -309,6 +451,7 @@ def test_ssd_initial_state():
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_seq), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_state_continuation():
     """Processing [first half] then [second half with carried state] must
     equal processing the whole sequence — the basis of chunked prefill AND

@@ -93,6 +93,7 @@ SUBPROC = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_migration_on_multidevice_mesh():
     r = subprocess.run(
         [sys.executable, "-c", SUBPROC], capture_output=True, text=True, timeout=300

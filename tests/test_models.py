@@ -67,6 +67,7 @@ def test_decode_matches_forward(family):
         pos = pos + 1
 
 
+@pytest.mark.slow
 def test_bucketed_prefill_matches_exact():
     cfg = make_cfg("dense")
     params = init_params(jax.random.key(0), cfg)
@@ -80,6 +81,7 @@ def test_bucketed_prefill_matches_exact():
     assert int(pos_b[0]) == 20
 
 
+@pytest.mark.slow
 def test_vlm_patch_embeds_change_output():
     cfg = ModelConfig(
         name="vlm", arch_type="vlm", rope_style="mrope", mrope_sections=(2, 3, 3),
@@ -94,6 +96,7 @@ def test_vlm_patch_embeds_change_output():
     assert not bool(jnp.allclose(l1, l2))
 
 
+@pytest.mark.slow
 def test_audio_codebook_logits_shape():
     cfg = ModelConfig(name="audio", arch_type="audio", n_codebooks=4, **BASE)
     params = init_params(jax.random.key(0), cfg)
@@ -102,6 +105,7 @@ def test_audio_codebook_logits_shape():
     assert logits.shape == (2, 16, 4, cfg.vocab_size)
 
 
+@pytest.mark.slow
 def test_sliding_window_limits_attention():
     """With window W, logits at position p must not depend on tokens < p-W."""
     cfg = make_cfg("sw-variant")
@@ -117,6 +121,7 @@ def test_sliding_window_limits_attention():
     )
 
 
+@pytest.mark.slow
 def test_moe_router_balance_loss_positive():
     cfg = make_cfg("moe")
     params = init_params(jax.random.key(0), cfg)
@@ -125,6 +130,7 @@ def test_moe_router_balance_loss_positive():
     assert float(aux) > 0.0
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat():
     cfg = make_cfg("dense")
     cfg_nr = cfg.replace(remat=False)

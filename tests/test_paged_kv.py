@@ -96,6 +96,7 @@ def test_store_gather_roundtrip(cfg, params):
     assert int((trimmed[0]["kv_pos"] >= 0).sum()) == 10
 
 
+@pytest.mark.slow
 def test_decode_step_paged_matches_dense(cfg, params):
     """The model-layer tentpole: paged decode (scatter into page cells +
     gather through the table) is exactly the full-width decode."""
@@ -177,10 +178,13 @@ def test_decode_step_paged_kv_pos_drops_at_capacity(cfg, params):
 # ---------------------------------------------------------------------------
 
 def test_pool_page_accounting(cfg, params):
+    # share_prefixes off: this test pins down the *unshared* accounting
+    # identity (every entry page is a distinct physical page); the
+    # cross-session dedup accounting has its own test below
     max_len = 64
     ids = (np.arange(40)[None] % cfg.vocab_size).astype(np.int32)
     _, dense, _ = prefill(params, cfg, jnp.asarray(ids), max_len=max_len)
-    alloc = PagedKVAllocator(cfg, page_size=16, n_pages=9)  # 8 allocatable
+    alloc = PagedKVAllocator(cfg, page_size=16, n_pages=9, share_prefixes=False)
     pool = SessionCachePool(capacity=8, allocator=alloc)
 
     pool.put("a", CacheEntry(list(range(40)), caches=dense))      # 3 pages
@@ -210,6 +214,119 @@ def test_pool_page_accounting(cfg, params):
 
     pool.clear()
     assert alloc.used_pages == 0 and pool.pages_in_use == 0
+
+
+def test_pool_page_accounting_shared(cfg, params):
+    """Cross-session dedup accounting: entries with a common token prefix
+    share physical pages — logical pages_in_use exceeds used_pages by the
+    dedup, unique_pages equals the physical count, and releasing one sharer
+    keeps the page alive for the other."""
+    max_len = 64
+    ids = (np.arange(40)[None] % cfg.vocab_size).astype(np.int32)
+    _, dense, _ = prefill(params, cfg, jnp.asarray(ids), max_len=max_len)
+    alloc = PagedKVAllocator(cfg, page_size=16, n_pages=9)
+    pool = SessionCachePool(capacity=8, allocator=alloc)
+
+    pool.put("a", CacheEntry(list(range(40)), caches=dense))   # 3 pages
+    pool.put("b", CacheEntry(list(range(20)), caches=dense))   # 2, first shared
+    assert pool.pages_in_use == 5           # logical: each entry's own view
+    assert alloc.used_pages == 4            # physical: page 0 deduped
+    s = pool.stats()
+    assert s["unique_pages"] == 4
+    shared_page = pool.peek("a").pages[0]
+    assert pool.peek("b").pages[0] == shared_page
+    assert alloc.refcount(shared_page) == 2
+
+    # donor eviction keeps the shared page alive for the sharer
+    pool.invalidate("a")
+    assert alloc.refcount(shared_page) == 1
+    assert alloc.used_pages == 2 == pool.pages_in_use
+    # ... and the index still names only live pages
+    for pg in alloc.index.pages():
+        assert alloc.refcount(pg) > 0
+    pool.clear()
+    assert alloc.used_pages == 0 and len(alloc.index) == 0
+
+
+def test_cow_divergence_mid_page_isolated(cfg, params):
+    """Copy-on-write isolation: two sessions sharing a full-page prefix and
+    diverging MID-page must share exactly the full common pages and nothing
+    else — each one's materialized bytes equal its own from-scratch prefill,
+    so neither ever observes the other's writes."""
+    max_len = 64
+    ids_a = list(range(32)) + [500, 501, 502, 503, 504, 505, 506, 507]
+    ids_b = list(range(32)) + [500, 501, 600, 601, 602, 603, 604, 605]
+    # same first 2 pages, divergence at token 34 — inside page 2
+    _, dense_a, _ = prefill(
+        params, cfg, jnp.asarray(np.asarray(ids_a)[None], np.int32), max_len=max_len
+    )
+    _, dense_b, _ = prefill(
+        params, cfg, jnp.asarray(np.asarray(ids_b)[None], np.int32), max_len=max_len
+    )
+    alloc = PagedKVAllocator(cfg, page_size=16, n_pages=9)
+    pool = SessionCachePool(capacity=8, allocator=alloc)
+    pool.put("a", CacheEntry(list(ids_a), caches=dense_a))
+    pool.put("b", CacheEntry(list(ids_b), caches=dense_b))
+    pa, pb = pool.peek("a").pages, pool.peek("b").pages
+    assert pa[:2] == pb[:2]                  # full common pages: shared
+    assert pa[2] != pb[2]                    # divergent page: fresh copy
+    assert all(alloc.refcount(p) == 2 for p in pa[:2])
+    for key, dense, n in (("a", dense_a, 40), ("b", dense_b, 40)):
+        back = pool.materialize(pool.peek(key), n, max_len)
+        valid = back[0]["kv_pos"] >= 0
+        vm = valid[None, :, :, None, None]
+        assert jnp.array_equal(
+            jnp.where(vm, back[0]["k"], 0), jnp.where(vm, dense[0]["k"], 0)
+        )
+        assert jnp.array_equal(
+            jnp.where(vm, back[0]["v"], 0), jnp.where(vm, dense[0]["v"], 0)
+        )
+
+
+@pytest.mark.slow
+def test_cow_three_way_donor_eviction(cfg, params):
+    """Donor eviction with live sharers: three sessions share the donor's
+    prefix pages; evicting the donor must keep those pages resident (the
+    sharers' refs pin them), keep the index mapping alive so LATER
+    admissions still match, and keep every surviving entry's bytes exact."""
+    max_len = 64
+    base = list(range(32))
+    mk = lambda suff: base + [700 + suff * 13 + i for i in range(6)]
+    dense = {}
+    for name, s in (("donor", 0), ("b", 1), ("c", 2), ("late", 3)):
+        ids = mk(s)
+        _, d, _ = prefill(
+            params, cfg, jnp.asarray(np.asarray(ids)[None], np.int32),
+            max_len=max_len,
+        )
+        dense[name] = (ids, d)
+    alloc = PagedKVAllocator(cfg, page_size=16, n_pages=12)
+    pool = SessionCachePool(capacity=8, allocator=alloc)
+    for name in ("donor", "b", "c"):
+        ids, d = dense[name]
+        pool.put(name, CacheEntry(list(ids), caches=d))
+    shared = pool.peek("donor").pages[:2]
+    assert pool.peek("b").pages[:2] == shared == pool.peek("c").pages[:2]
+    assert all(alloc.refcount(p) == 3 for p in shared)
+
+    pool.invalidate("donor")                  # donor gone, sharers remain
+    assert all(alloc.refcount(p) == 2 for p in shared)
+    assert set(shared) <= set(alloc.index.pages())
+
+    ids, d = dense["late"]                    # post-eviction admission still
+    pool.put("late", CacheEntry(list(ids), caches=d))   # matches the run
+    assert pool.peek("late").pages[:2] == shared
+    assert all(alloc.refcount(p) == 3 for p in shared)
+    for name in ("b", "c", "late"):
+        ids, d = dense[name]
+        back = pool.materialize(pool.peek(name), len(ids), max_len)
+        valid = back[0]["kv_pos"] >= 0
+        vm = valid[None, :, :, None, None]
+        assert jnp.array_equal(
+            jnp.where(vm, back[0]["k"], 0), jnp.where(vm, d[0]["k"], 0)
+        )
+    pool.clear()
+    assert alloc.used_pages == 0 and len(alloc.index) == 0
 
 
 def test_same_key_growth_reuses_own_pages(cfg, params):
@@ -266,6 +383,7 @@ def test_paged_server_greedy_equivalent(cfg, params, tok, servers):
     assert paged.allocator.used_pages == 0
 
 
+@pytest.mark.slow
 def test_paged_session_reuse_matches_full_width(tok, servers):
     """Multi-turn sessions: write-back moves the slot's pages into the pool
     entry, and the next turn's admission shares them — token-for-token equal
@@ -517,6 +635,7 @@ def test_paged_doubles_resident_sessions_in_same_budget(cfg, params, tok):
 # Fused paged-attention kernel on the serving path
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_pallas_paged_server_greedy_equivalent(cfg, params, tok):
     """End-to-end equivalence of the decode inner loop's two executions:
     a paged BatchedServer with ``attn_impl="pallas"`` (fused kernel
@@ -548,6 +667,58 @@ def test_pallas_paged_server_greedy_equivalent(cfg, params, tok):
         assert fins["reference"].reused_tokens == fins["pallas"].reused_tokens
         assert fins["reference"].cache_hit == fins["pallas"].cache_hit == (turn > 0)
         ctx = ids + fins["reference"].token_ids
+
+
+@pytest.mark.slow
+def test_cross_session_sharing_token_identical(cfg, params, tok):
+    """Tentpole e2e equivalence: N tenants with an identical multi-page
+    system prompt, served with sharing on (reference + pallas cascade) and
+    sharing off — greedy outputs token-identical everywhere, while the
+    sharing servers hold strictly fewer physical pages and record the
+    cross-session hits."""
+    base = tok.encode("system: you are a helpful edge assistant. " * 6)
+    assert len(base) >= 48                      # spans >= 3 full 16-pages
+    reqs = [
+        base + tok.encode(f"tenant {i}: what do you see?") for i in range(4)
+    ]
+    variants = {
+        "ref_on": ("reference", True),
+        "ref_off": ("reference", False),
+        "pallas_on": ("pallas", True),
+    }
+    outs, srvs = {}, {}
+    for name, (impl, share) in variants.items():
+        srv = BatchedServer(
+            cfg.replace(attn_impl=impl), params, n_slots=2, max_len=128,
+            session_pool=SessionCachePool(capacity=8),
+            paged=True, page_size=16, share_prefixes=share,
+        )
+        rids = [
+            srv.submit(list(r), max_new=5, cache_key=f"t{i}")
+            for i, r in enumerate(reqs)
+        ]
+        fin = {f.request_id: f.token_ids for f in srv.run_to_completion()}
+        outs[name] = [fin[r] for r in rids]
+        srvs[name] = srv
+    assert outs["ref_on"] == outs["ref_off"] == outs["pallas_on"]
+
+    on, off = srvs["ref_on"], srvs["ref_off"]
+    # sharing dedups the common prompt pages: strictly fewer physical pages
+    # resident for the same logical state, and the hits are accounted
+    assert on.allocator.used_pages < off.allocator.used_pages
+    s_on = on.session_pool.stats()
+    assert s_on["shared_hits"] >= 3 and s_on["shared_tokens"] >= 3 * 48
+    assert s_on["unique_pages"] < s_on["pages_in_use"]
+    off_s = off.session_pool.stats()
+    assert off_s["shared_hits"] == 0
+    assert off_s["unique_pages"] == off_s["pages_in_use"]
+    # invariants hold on every server: accounting balances, index only
+    # names live pages
+    for srv in srvs.values():
+        alloc = srv.allocator
+        assert alloc.used_pages + alloc.n_free == alloc.n_pages - 1
+        for pg in alloc.index.pages():
+            assert alloc.refcount(pg) > 0
 
 
 # ---------------------------------------------------------------------------

@@ -5,8 +5,7 @@ op sequences."""
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.models import ModelConfig
 from repro.serving import CacheEntry, PagedKVAllocator, SessionCachePool

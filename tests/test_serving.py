@@ -69,6 +69,7 @@ def test_batched_server_completes_all(cfg):
     assert all(1 <= len(f.token_ids) <= 6 for f in fin)
 
 
+@pytest.mark.slow
 def test_batched_matches_single_stream(cfg):
     """Continuous batching must not change a request's tokens vs. running
     it alone (slots are isolated)."""

@@ -79,6 +79,7 @@ def test_append_matches_full_prefill(cfg, params):
     assert _greedy(params, cfg, lf, cf, pf) == _greedy(params, cfg, la, ca, pa)
 
 
+@pytest.mark.slow
 def test_append_rejects_unsupported_arch():
     ssm_cfg = ModelConfig(
         name="tiny-ssm", arch_type="ssm", n_layers=2, d_model=64, n_heads=0,
@@ -104,6 +105,7 @@ def services(cfg):
     return reuse, scratch
 
 
+@pytest.mark.slow
 def test_cached_prefill_identical_generations(services):
     """Cache-hit turns must generate exactly what a from-scratch prefill
     generates, while prefilling only the new-token suffix."""

@@ -3,8 +3,7 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.tokenizer import (
     ByteLevelBPE,
