@@ -1,0 +1,246 @@
+"""Fleet benchmark: routing policies under heavy seeded traffic, plus
+adaptive mounting against the fixed serving paths.
+
+Part 1 — **routing scenario** (analytic echo fleet, docs/architecture.md
+"Fleet layer"): one seeded workload — 256 clients arriving on a diurnal
+Poisson ramp, bounded-Pareto session lengths, Zipf prompt families — is
+replayed against a 4-node cluster once per routing policy (``random``,
+``round_robin``, ``residency``). Every run carries the same mid-run node
+crash/restart and per-node admission control; the policies differ only in
+where the router sends each turn. Reported per policy: aggregate
+generated tokens/s, p50/p99 client-observed turn latency (failover and
+requeue round-trips included), KV-hit rate, shed rate.
+
+Part 2 — **adaptive mounting** (real JAX engines): reuses the concurrency
+benchmark's wave driver to run c=2 and c=16 against three mounts of the
+same reduced model — pure single-stream, pure batched, and
+:class:`~repro.fleet.AdaptiveLLMService` flipping between the two by
+observed concurrency. This targets the measured c=1-4 regression in
+BENCH_concurrency.json: batching bookkeeping loses at low tenancy.
+
+Acceptance (BENCH_fleet.json): at 256 clients over 4 nodes the
+``residency`` policy beats ``random`` and ``round_robin`` on KV-hit rate,
+p50, and p99; the routed scenario's mid-run crash leaves zero hung
+tickets under every policy; adaptive stays within 10% of the better fixed
+mount (and ahead of the worse one) at both c=2 and c=16.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench          # full
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke  # echo only
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+POLICIES = ("random", "round_robin", "residency")
+N_CLIENTS = 256
+N_NODES = 4
+ADAPTIVE_WAVES = (2, 16)
+
+
+def _build_fleet(policy: str, n_nodes: int, admission_limit: int):
+    from repro.edge import EchoLLMService, EdgeCluster
+    from repro.store import Link
+
+    # Analytic fleet node: a few inference slots, a *bounded* session pool
+    # (the scarce resource residency routing manages), decode cheap enough
+    # that prefill — what KV hits save — dominates a long session's turn.
+    return EdgeCluster.build(
+        [f"edge-{i}" for i in range(n_nodes)],
+        lambda nid: EchoLLMService(
+            model="fleet", vocab_size=32000, kv_reuse=True,
+            tokenize_scale=0.0, n_slots=4, session_capacity=32,
+            decode_ms_per_token=10.0,
+        ),
+        inter_node_link=Link(latency_ms=1.0, bandwidth_mbps=1000.0),
+        client_link=Link(latency_ms=8.0, bandwidth_mbps=50.0),
+        router=policy,
+        admission_limit=admission_limit,
+    )
+
+
+def _scenario(n_clients: int, seed: int = 0):
+    from repro.fleet import WorkloadSpec, generate_workload
+
+    spec = WorkloadSpec(
+        n_clients=n_clients, seed=seed,
+        arrival_rate_per_s=12.0, diurnal_amplitude=0.6,
+        diurnal_period_ms=20_000.0,
+        pareto_alpha=1.5, max_turns=12,
+        n_families=16, zipf_s=1.1,
+        think_ms_mean=600.0,
+    )
+    return spec, generate_workload(spec)
+
+
+def _run_policies(n_clients: int, n_nodes: int, *, admission_limit: int = 8):
+    """One identical workload + churn schedule per policy; returns
+    {policy: FleetResult.summary()}."""
+    from repro.fleet import ChurnEvent, run_fleet
+
+    _, plans = _scenario(n_clients)
+    horizon = max(p.start_ms for p in plans)
+    churn = [ChurnEvent("edge-1", 0.3 * horizon, 0.6 * horizon)]
+    out = {}
+    for policy in POLICIES:
+        cluster = _build_fleet(policy, n_nodes, admission_limit)
+        res = run_fleet(cluster, plans, policy_name=policy, churn=churn)
+        assert res.hung_tickets == 0, (policy, res.hung_tickets)
+        assert res.ok_turns > 0
+        out[policy] = res.summary()
+    return out
+
+
+def _adaptive_sweep():
+    """c=2 / c=16 waves over single-stream, batched, and adaptive mounts of
+    the same model, through concurrency_bench's wave driver."""
+    from benchmarks.concurrency_bench import _metrics, _run_wave
+    from repro.fleet import AdaptiveLLMService
+    from repro.models import ModelConfig
+    from repro.serving import BatchedLLMService, JaxLLMService
+
+    cfg = ModelConfig(
+        name="fleet-adapt", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=4096,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    single = JaxLLMService.create("fleet-adapt", cfg, max_len=256, seed=0)
+    batched = BatchedLLMService.create(
+        "fleet-adapt", cfg, n_slots=max(ADAPTIVE_WAVES), max_len=256, seed=0,
+        session_cache_capacity=2 * max(ADAPTIVE_WAVES),
+    )
+
+    def mounts():
+        # fresh wrapper per wave: the mount decision restarts from
+        # single-stream, while the underlying engines (and their jit
+        # caches) are shared across all waves
+        return {
+            "single_stream": lambda: single,
+            "batched": lambda: batched,
+            "adaptive": lambda: AdaptiveLLMService(
+                single=single, batched=batched
+            ),
+        }
+
+    # warmup: compile every prefill bucket + decode shape on both engines
+    for make in mounts().values():
+        _run_wave(lambda nid, _m=make(): _m, max(ADAPTIVE_WAVES),
+                  model="fleet-adapt")
+
+    results = {}
+    for name, make in mounts().items():
+        results[name] = {}
+        for c in ADAPTIVE_WAVES:
+            reps = []
+            for _ in range(2):
+                svc = make()
+                reps.append(
+                    _metrics(*_run_wave(lambda nid: svc, c, model="fleet-adapt"))
+                )
+            results[name][str(c)] = max(
+                reps, key=lambda m: m["agg_tokens_per_s"]
+            )
+    return results
+
+
+def fleet_bench(emit) -> None:
+    routed = _run_policies(N_CLIENTS, N_NODES)
+    for policy, m in routed.items():
+        emit(
+            f"fleet_{policy}_p99", m["p99_ms"] * 1e3,
+            f"p50={m['p50_ms']:.0f}ms;kv={m['kv_hit_rate']:.2f};"
+            f"tps={m['agg_tok_s']:.0f};shed={m['shed_rate']:.2f}",
+        )
+
+    res = routed["residency"]
+    for baseline in ("random", "round_robin"):
+        base = routed[baseline]
+        assert res["kv_hit_rate"] > base["kv_hit_rate"], (baseline, routed)
+        assert res["p50_ms"] < base["p50_ms"], (baseline, routed)
+        assert res["p99_ms"] < base["p99_ms"], (baseline, routed)
+    emit(
+        "fleet_residency_kv_hit_rate", res["kv_hit_rate"] * 1e6,
+        f"vs_random={routed['random']['kv_hit_rate']:.2f}",
+    )
+
+    adaptive = _adaptive_sweep()
+    for c in ADAPTIVE_WAVES:
+        tps = {
+            name: adaptive[name][str(c)]["agg_tokens_per_s"]
+            for name in adaptive
+        }
+        better = max(tps["single_stream"], tps["batched"])
+        # "matches or beats the better fixed mount" with a 10% wall-clock
+        # noise band — the two engines run real (shared-CPU) compute, and
+        # when they tie the better/worse split itself is noise
+        assert tps["adaptive"] >= 0.9 * better, (c, tps)
+        emit(
+            f"fleet_adaptive_c{c}_tps", tps["adaptive"],
+            f"single={tps['single_stream']:.0f};batched={tps['batched']:.0f}",
+        )
+
+    out = {
+        "scenario": {
+            "n_clients": N_CLIENTS,
+            "n_nodes": N_NODES,
+            "policies": list(POLICIES),
+            "admission_limit": 8,
+            "churn": "crash edge-1 at 30% of the arrival horizon, restart at 60%",
+        },
+        "routing": routed,
+        "adaptive": adaptive,
+        "acceptance": {
+            "hung_tickets": {p: routed[p]["hung_tickets"] for p in POLICIES},
+            "kv_hit_rate": {p: routed[p]["kv_hit_rate"] for p in POLICIES},
+            "p50_ms": {p: routed[p]["p50_ms"] for p in POLICIES},
+            "p99_ms": {p: routed[p]["p99_ms"] for p in POLICIES},
+            "residency_kv_over_random": (
+                res["kv_hit_rate"] / max(1e-9, routed["random"]["kv_hit_rate"])
+            ),
+            "adaptive_vs_better_fixed": {
+                str(c): (
+                    adaptive["adaptive"][str(c)]["agg_tokens_per_s"]
+                    / max(
+                        adaptive["single_stream"][str(c)]["agg_tokens_per_s"],
+                        adaptive["batched"][str(c)]["agg_tokens_per_s"],
+                    )
+                )
+                for c in ADAPTIVE_WAVES
+            },
+        },
+    }
+    path = Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+def smoke() -> None:
+    """CI fast-gate smoke (<1 min, no JAX): a scaled-down routed scenario
+    per policy — every ticket resolves through churn, and residency routing
+    shows its KV-hit advantage."""
+    routed = _run_policies(48, 3, admission_limit=6)
+    assert all(m["hung_tickets"] == 0 for m in routed.values())
+    res = routed["residency"]
+    assert res["kv_hit_rate"] > routed["random"]["kv_hit_rate"]
+    assert res["kv_hit_rate"] > routed["round_robin"]["kv_hit_rate"]
+    print("fleet smoke OK:", json.dumps(
+        {p: round(m["kv_hit_rate"], 3) for p, m in routed.items()}
+    ))
+
+
+def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+
+    print("name,us_per_call,derived")
+    fleet_bench(emit)
+
+
+if __name__ == "__main__":
+    main()

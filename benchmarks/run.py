@@ -14,6 +14,7 @@ import sys
 def main() -> None:
     from .churn_bench import churn_bench
     from .concurrency_bench import concurrency_bench
+    from .fleet_bench import fleet_bench
     from .kernel_bench import kernel_microbench
     from .migration_bench import migration_bench
     from .paged_attn_bench import paged_attn_bench
@@ -34,6 +35,7 @@ def main() -> None:
     benches = ALL_FIGURES + [
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
         concurrency_bench, paged_kv_bench, paged_attn_bench, churn_bench,
+        shared_prefix_bench, fleet_bench,
     ]
     for bench in benches:
         tag = bench.__name__

@@ -35,6 +35,9 @@ python -m benchmarks.shared_prefix_bench --smoke
 echo "== smoke: node churn (crashes + partition + loss; failover, convergence) =="
 python -m benchmarks.churn_bench --smoke
 
+echo "== smoke: fleet routing (residency vs baselines under churn, echo only) =="
+python -m benchmarks.fleet_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 

@@ -8,6 +8,7 @@ distributed KV store (repro.store).
 
 from .protocol import (
     NODE_DOWN,
+    OVERLOADED,
     ConsistencyPolicy,
     ContextMode,
     Request,
@@ -16,6 +17,7 @@ from .protocol import (
     Ticket,
     Timing,
     is_node_down_error,
+    is_overload_error,
 )
 from .tokens import RawContext, TokenizedContext
 from .session import ChatTurn, Session, context_key, fresh_session_id, fresh_user_id
@@ -36,7 +38,9 @@ from .manager import (
 
 __all__ = [
     "NODE_DOWN",
+    "OVERLOADED",
     "is_node_down_error",
+    "is_overload_error",
     "ConsistencyPolicy",
     "ContextMode",
     "Request",

@@ -212,6 +212,12 @@ class ContextManager:
         self.down = False
 
     @property
+    def inflight_count(self) -> int:
+        """Turns currently between submit and finish — the node's observed
+        concurrency (fleet telemetry + admission-control input)."""
+        return len(self._inflight)
+
+    @property
     def tokenize_scale(self) -> float:
         """Hardware-calibrated clock factor for tokenization time: the BPE
         work is real, but this host is much faster than the paper's edge

@@ -142,6 +142,19 @@ def is_node_down_error(error: Optional[str]) -> bool:
     return error is not None and error.startswith(NODE_DOWN)
 
 
+# Error-marker prefix for requests shed by a node's admission controller
+# (docs/architecture.md, "Fleet layer"): the node is alive but refuses work
+# beyond its concurrency limit. The client *requeues* such a turn on another
+# keygroup member (router-ranked when a fleet router is mounted) — distinct
+# from node-down failover so the two are observable separately.
+OVERLOADED = "overloaded"
+
+
+def is_overload_error(error: Optional[str]) -> bool:
+    """Does this Response.error mean the node shed the request at admission?"""
+    return error is not None and error.startswith(OVERLOADED)
+
+
 @dataclass
 class Ticket:
     """Handle for one in-flight request on the submit/await serving path.

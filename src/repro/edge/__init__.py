@@ -1,6 +1,6 @@
 from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
 from .client import CLIENT_HOST, LLMClient, SessionTrace
-from .node import EdgeNode
+from .node import EdgeNode, LoadReport
 from .service import EchoLLMService
 
 __all__ = [
@@ -11,5 +11,6 @@ __all__ = [
     "LLMClient",
     "SessionTrace",
     "EdgeNode",
+    "LoadReport",
     "EchoLLMService",
 ]

@@ -29,6 +29,7 @@ speaking, and a different node would only be *more* stale.
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -41,7 +42,9 @@ from ..core.protocol import (
     Ticket,
     Timing,
     is_node_down_error,
+    is_overload_error,
 )
+from ..core.session import context_key
 from .cluster import CLIENT_DOWN_TAG, CLIENT_UP_TAG, EdgeCluster
 
 CLIENT_HOST = "client"
@@ -79,15 +82,44 @@ class LLMClient:
     failovers: int = 0
     timeouts: int = 0
     late_responses: int = 0   # answers that arrived after we gave up on them
+    # Turns shed by a node's admission controller and requeued on a peer —
+    # counted apart from failovers (the node was alive, just full).
+    requeues: int = 0
+    # Failover spread: peers are rotated by a per-client salt so a fleet of
+    # clients abandoning one dead node fans out across its keygroup instead
+    # of stampeding the same first peer. ``None`` (default) derives the salt
+    # from the server-assigned user id; pin an int to fix the order (tests).
+    failover_salt: Optional[int] = None
     # client-side mode keeps the full history locally and ships it each turn
     history: List[Tuple[str, str]] = field(default_factory=list)
     request_bytes_log: List[int] = field(default_factory=list)
     response_log: List[Response] = field(default_factory=list)
 
     # -- submit/await -----------------------------------------------------
+    def _salt(self) -> int:
+        if self.failover_salt is not None:
+            return self.failover_salt
+        if self.user_id:
+            # server-assigned ids are sequential ("user-0007") — use the
+            # suffix so *neighbouring* clients start on different peers
+            tail = self.user_id.rsplit("-", 1)[-1]
+            if tail.isdigit():
+                return int(tail)
+            return zlib.crc32(self.user_id.encode("utf-8"))
+        return 0
+
+    def _cache_key(self) -> Optional[str]:
+        """The session's context/KV cache key — what the router scores
+        residency against. None until the server assigns identifiers."""
+        if self.user_id and self.session_id:
+            return context_key(self.user_id, self.session_id)
+        return None
+
     def _failover_targets(self, primary: str) -> List[str]:
-        """Attempt order: the chosen node, then its keygroup peers in ring
-        order (they hold replicas of this session's context)."""
+        """Attempt order: the chosen node, then its keygroup peers (they
+        hold replicas of this session's context) rotated by the client's
+        salt — ring order alone would send every client fleeing the same
+        dead node to the same first peer."""
         try:
             members = self.cluster.store.keygroup(self.model).members
         except KeyError:
@@ -95,12 +127,16 @@ class LLMClient:
         if primary not in members:
             return [primary] + [m for m in members]
         i = members.index(primary)
-        return [members[(i + k) % len(members)] for k in range(len(members))]
+        peers = [members[(i + k) % len(members)] for k in range(1, len(members))]
+        if len(peers) > 1:
+            s = self._salt() % len(peers)
+            peers = peers[s:] + peers[:s]
+        return [primary] + peers
 
     def submit(
         self,
         prompt: str,
-        node_id: str,
+        node_id: Optional[str] = None,
         *,
         delay_ms: float = 0.0,
         on_response: Optional[Callable[[Response], None]] = None,
@@ -113,10 +149,21 @@ class LLMClient:
         fast-forwarded). The Request is built when the send actually fires,
         so a deferred turn carries the session state left by the previous
         one. On node-down or timeout the turn retries on a keygroup peer
-        (see the module docstring); the ticket always resolves."""
+        (see the module docstring); the ticket always resolves.
+
+        Node choice (docs/architecture.md, "Fleet layer"): an explicit
+        ``node_id`` is honored for the first attempt (mobility experiments
+        steer placement); ``node_id=None`` asks the cluster's mounted
+        :class:`~repro.fleet.router.FleetRouter` to place the turn. Retry
+        attempts — failover after node-down/timeout, requeue after an
+        admission shed — consult the router too (excluding nodes already
+        tried), falling back to salted ring order without one."""
         net = self.cluster.network
+        router = getattr(self.cluster, "router", None)
+        if node_id is None and router is None:
+            raise ValueError("submit(node_id=None) requires a mounted fleet "
+                             "router — EdgeCluster.build(router=...)")
         ticket = Ticket(submitted_at_ms=net.clock.now_ms + max(0.0, delay_ms))
-        targets = self._failover_targets(node_id)
         # Attempt generation: each attempt (and each abandonment) bumps it,
         # so events belonging to a dead attempt — late deliveries, stale
         # deadline timers — become no-ops instead of double-resolving.
@@ -125,12 +172,37 @@ class LLMClient:
         def current(g: int) -> bool:
             return state["gen"] == g and not ticket.done
 
+        def static_targets() -> List[str]:
+            if node_id is not None:
+                return self._failover_targets(node_id)
+            try:
+                return list(self.cluster.store.keygroup(self.model).members)
+            except KeyError:
+                return []
+
+        def pick_target(idx: int) -> str:
+            if idx == 0 and node_id is not None:
+                return node_id
+            if router is not None:
+                ranked = router.route(
+                    self.model,
+                    cache_key=self._cache_key(),
+                    exclude=ticket.nodes_tried,
+                )
+                if ranked:
+                    return ranked[0]
+            targets = static_targets()
+            return targets[idx % len(targets)] if targets else str(node_id)
+
+        def more_peers() -> bool:
+            return len(static_targets()) > 1
+
         def start_attempt(idx: int) -> None:
             if ticket.done:
                 return
             state["gen"] += 1
             g = state["gen"]
-            target = targets[idx % len(targets)]
+            target = pick_target(idx)
             ticket.attempts += 1
             ticket.nodes_tried.append(target)
             send(g, idx, target)
@@ -204,6 +276,11 @@ class LLMClient:
             if is_node_down_error(resp.error):
                 fail_attempt(g, idx, target, resp.error)
                 return
+            if is_overload_error(resp.error):
+                # the node is alive but shed us at admission: requeue on a
+                # peer (router-ranked), same attempt budget as failover
+                retry(g, idx, resp, "requeues")
+                return
             if resp.error is None:
                 # adopt server-assigned identifiers; bump the turn counter
                 self.user_id = resp.user_id
@@ -227,21 +304,28 @@ class LLMClient:
         def fail_attempt(g: int, idx: int, target: str, reason: str) -> None:
             if not current(g):
                 return
+            resp = Response(
+                text="", user_id=self.user_id or "",
+                session_id=self.session_id or "", turn=self.turn,
+                served_by=target, n_prompt_tokens=0, n_context_tokens=0,
+                n_generated_tokens=0, timing=Timing(), error=reason,
+            )
+            retry(g, idx, resp, "failovers")
+
+        def retry(g: int, idx: int, resp: Response, counter: str) -> None:
+            """Shared retry tail for failover (node down/timeout) and
+            requeue (admission shed): try the next peer after backoff while
+            budget and peers remain, else resolve with the error — never
+            hang."""
             state["gen"] += 1  # abandon: late events for attempt g no-op
-            if self.failover and idx + 1 < self.max_attempts and len(targets) > 1:
-                self.failovers += 1
+            if self.failover and idx + 1 < self.max_attempts and more_peers():
+                setattr(self, counter, getattr(self, counter) + 1)
                 net.schedule(
                     net.clock.now_ms + self.failover_backoff_ms,
                     lambda: start_attempt(idx + 1),
                 )
                 return
-            # attempt budget exhausted: resolve explicitly — never hang
-            resolve(Response(
-                text="", user_id=self.user_id or "",
-                session_id=self.session_id or "", turn=self.turn,
-                served_by=target, n_prompt_tokens=0, n_context_tokens=0,
-                n_generated_tokens=0, timing=Timing(), error=reason,
-            ))
+            resolve(resp)  # attempt budget exhausted: resolve explicitly
 
         def resolve(resp: Response) -> None:
             self.response_log.append(resp)
@@ -257,17 +341,22 @@ class LLMClient:
 
     def run_session(
         self,
-        turns: Sequence[Tuple[str, str]],
+        turns: Sequence[Tuple[str, Optional[str]]],
         think_ms: float = 0.0,
         on_turn: Optional[Callable[[int, Response], None]] = None,
         continue_on_error: bool = False,
+        start_delay_ms: float = 0.0,
     ) -> SessionTrace:
         """Chain a multi-turn conversation: turn ``i+1`` is sent
         ``think_ms`` after turn ``i``'s response arrives at the client —
         think time as a *per-client* event, never a shared-clock advance.
         ``turns`` is a sequence of ``(prompt, node_id)`` pairs (the node
-        choice per turn models mobility, like the paper's switches). The
-        session stops early on a protocol error (e.g. a STRONG-policy
+        choice per turn models mobility, like the paper's switches;
+        ``node_id=None`` routes the turn through the cluster's fleet
+        router). ``start_delay_ms`` defers the whole session — scenario
+        engines schedule thousands of session arrivals this way without
+        advancing the shared clock. The session stops early on a protocol
+        error (e.g. a STRONG-policy
         staleness failure) unless ``continue_on_error`` — churn workloads
         set it so one explicitly failed turn doesn't strand the rest of the
         conversation (the turn counter didn't advance; the next turn simply
@@ -292,7 +381,7 @@ class LLMClient:
                 trace.done = True
 
         if turns:
-            launch(0, 0.0)
+            launch(0, max(0.0, start_delay_ms))
         else:
             trace.done = True
         return trace

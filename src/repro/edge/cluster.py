@@ -32,6 +32,10 @@ class EdgeCluster:
     network: Network
     store: DistributedKVStore
     nodes: Dict[str, EdgeNode] = field(default_factory=dict)
+    # Fleet layer (docs/architecture.md): the mounted FleetRouter, or None.
+    # LLMClient consults it for placement; mount via build(router=...) or
+    # repro.fleet.mount_router on a built cluster.
+    router: Optional[object] = None
 
     @classmethod
     def build(
@@ -45,11 +49,21 @@ class EdgeCluster:
         retry: Optional[RetryPolicy] = None,
         context_ttl_ms: Optional[float] = None,
         warm_start: str = "eager",
+        router: Optional[object] = None,
+        admission_limit: Optional[int] = None,
     ) -> "EdgeCluster":
         """Build a cluster where every node serves the same model — one
         keygroup per model, membership = nodes serving it (paper §3.3).
         ``warm_start`` ("eager"/"off") controls the migration warm-start
-        hook on each node (see EdgeNode.create)."""
+        hook on each node (see EdgeNode.create).
+
+        Fleet options (docs/architecture.md, "Fleet layer"): ``router``
+        mounts a :class:`~repro.fleet.router.FleetRouter` — pass a policy
+        name (``"random"``/``"round_robin"``/``"residency"``) or a
+        :class:`~repro.fleet.router.RoutingPolicy` instance;
+        ``admission_limit`` gives every node an
+        :class:`~repro.fleet.admission.AdmissionControl` with that
+        concurrency target."""
         net = Network(default_link=inter_node_link or Link(latency_ms=1.0, bandwidth_mbps=1000.0))
         if client_link is not None:
             for nid in node_ids:
@@ -64,6 +78,21 @@ class EdgeCluster:
             by_model.setdefault(svc.model, []).append(nid)
         for model, members in by_model.items():
             tok = services[members[0]].tokenizer
+            # The keygroup's size/delta closures bill replication traffic
+            # with ONE member's tokenizer — sizes would silently lie if the
+            # members tokenized differently (and a migrated context's token
+            # ids would be garbage to the destination's engine).
+            for m in members[1:]:
+                other = services[m].tokenizer
+                assert (
+                    other.vocab_size == tok.vocab_size
+                    and other.seed == tok.seed
+                ), (
+                    f"keygroup {model!r}: node {m!r} tokenizer "
+                    f"(vocab={other.vocab_size}, seed={other.seed}) differs "
+                    f"from {members[0]!r} (vocab={tok.vocab_size}, "
+                    f"seed={tok.seed}) — keygroup members must share one"
+                )
             store.create_keygroup(
                 model,
                 members,
@@ -79,6 +108,15 @@ class EdgeCluster:
             cluster.nodes[nid] = EdgeNode.create(
                 nid, store, services[nid], retry=retry, warm_start=warm_start
             )
+        if admission_limit is not None:
+            from ..fleet.admission import AdmissionControl  # lazy: no cycle
+            for node in cluster.nodes.values():
+                node.admission = AdmissionControl(limit=admission_limit)
+        if router is not None:
+            from ..fleet.router import make_policy, mount_router
+            policy = make_policy(router, shed_limit=admission_limit) \
+                if isinstance(router, str) else router
+            mount_router(cluster, policy)
         return cluster
 
     def node(self, node_id: str) -> EdgeNode:
@@ -142,6 +180,11 @@ class EdgeCluster:
         self.nodes[node_id].restart()
         self.store.anti_entropy(node_id)
         self.store.kick_outbox(node_id)
+        # a rejoining node must re-announce itself to the fleet router —
+        # its heartbeat chain died with it
+        bus = getattr(self.router, "bus", None)
+        if bus is not None:
+            bus.kick()
 
     def converged(self) -> bool:
         """Do all *live* replicas of every keygroup hold identical

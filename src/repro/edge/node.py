@@ -14,15 +14,45 @@ new tokens — the node switch stops being a full re-prefill.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from time import perf_counter
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Dict, Optional
 
 from ..core.consistency import RetryPolicy
 from ..core.manager import ContextManager, LLMServiceProtocol
-from ..core.protocol import Request, Response, Ticket
+from ..core.protocol import OVERLOADED, Request, Response, Ticket, Timing
 from ..store.distributed import DistributedKVStore
 from ..store.kvstore import VersionedValue
+
+if TYPE_CHECKING:  # fleet imports edge; the reverse stays type-only
+    from ..fleet.admission import AdmissionControl
+
+# EWMA smoothing for the node's observed generation throughput — one
+# decade of turns dominates the estimate (docs/architecture.md, "Fleet
+# layer").
+_TPS_ALPHA = 0.3
+
+
+@dataclass
+class LoadReport:
+    """One node's telemetry snapshot, published on the fleet heartbeat
+    (docs/architecture.md, "Fleet layer"). Consumers must treat it as
+    *possibly stale*: it describes the node at ``sent_at_ms``, and the
+    router reads it at ``received_at_ms`` or later — never as ground truth
+    for liveness (client failover is the correctness backstop)."""
+
+    node_id: str
+    sent_at_ms: float
+    # cache_key -> resident KV token count in the node's session pool
+    resident: Dict[str, int] = field(default_factory=dict)
+    active: int = 0        # turns between submit and finish
+    queue_depth: int = 0   # active beyond the service's slot count
+    ewma_tps: float = 0.0  # smoothed generation throughput (tok/s)
+    received_at_ms: float = 0.0  # stamped by the heartbeat bus on delivery
+
+    def wire_bytes(self) -> int:
+        # header/ids/counters + one (key-hash, token-count) pair per entry
+        return 96 + 16 * len(self.resident)
 
 
 @dataclass
@@ -41,6 +71,11 @@ class EdgeNode:
     # cluster-level crash was invoked with lose_replica=True.
     alive: bool = True
     crashes: int = 0
+    # Fleet layer (docs/architecture.md): optional per-node admission
+    # controller (None: admit everything — the pre-fleet behaviour) and the
+    # smoothed generation throughput published in load reports.
+    admission: Optional["AdmissionControl"] = None
+    ewma_tps: float = 0.0
 
     @classmethod
     def create(
@@ -80,12 +115,54 @@ class EdgeNode:
         ticket = Ticket(request=req, submitted_at_ms=net.clock.now_ms)
 
         def resolve(resp: Response) -> None:
+            if resp.error is None and resp.tps > 0:
+                self.ewma_tps = (
+                    resp.tps if self.ewma_tps == 0.0
+                    else _TPS_ALPHA * resp.tps + (1 - _TPS_ALPHA) * self.ewma_tps
+                )
             ticket.resolve(resp, net.clock.now_ms)
             if on_done is not None:
                 on_done(resp)
 
+        if self.admission is not None and not self.admission.admit(
+            self.manager.inflight_count
+        ):
+            # Shed at the door — before any prepare work. The refusal is a
+            # normal response on the downlink (the client requeues it on a
+            # peer), not a node-down error: the node is alive, just full.
+            resolve(Response(
+                text="", user_id=req.user_id or "",
+                session_id=req.session_id or "", turn=req.turn,
+                served_by=self.node_id, n_prompt_tokens=0,
+                n_context_tokens=0, n_generated_tokens=0, timing=Timing(),
+                error=(
+                    f"{OVERLOADED}: {self.node_id} at "
+                    f"{self.admission.limit} in-flight"
+                ),
+            ))
+            return ticket
+
         self.manager.submit(req, resolve)
         return ticket
+
+    # -- fleet telemetry ----------------------------------------------------
+    def load_report(self) -> LoadReport:
+        """Snapshot this node's load for the heartbeat (docs/architecture.md,
+        "Fleet layer"): KV residency by cache key, observed concurrency, and
+        smoothed throughput. Cheap by design — it reads counters and the
+        pool's key index, never device state."""
+        resident_fn = getattr(self.service, "resident_keys", None)
+        resident = dict(resident_fn()) if resident_fn is not None else {}
+        active = self.manager.inflight_count
+        n_slots = max(1, self.service.capabilities().n_slots)
+        return LoadReport(
+            node_id=self.node_id,
+            sent_at_ms=self.manager.store.network.clock.now_ms,
+            resident=resident,
+            active=active,
+            queue_depth=max(0, active - n_slots),
+            ewma_tps=self.ewma_tps,
+        )
 
     def handle(self, req: Request) -> Response:
         """Blocking compatibility shim (see ContextManager.handle)."""

@@ -25,6 +25,7 @@ history and only processes the new prompt tokens.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
@@ -86,15 +87,25 @@ class EchoLLMService:
     n_generate: int = 24
     kv_reuse: bool = False
     n_slots: int = 1
+    # Bounded virtual session pool (None: unbounded — the pre-fleet
+    # behaviour). At fleet scale the KV pool is the scarce resource: an
+    # LRU bound makes placement matter — a node serving too many sessions
+    # evicts, so scattering one session across nodes loses its KV
+    # residency. Same LRU semantics as SessionCachePool: serve installs at
+    # MRU, a fresh prime installs at the LRU end (next victim), a hit
+    # promotes to MRU, an extension keeps its position.
+    session_capacity: Optional[int] = None
 
     def __post_init__(self) -> None:
         self.tokenizer: ByteLevelBPE = get_tokenizer(
             self.vocab_size, seed=self.tokenizer_seed, name=self.model
         )
         # cache_key -> token prefix whose KV the analytic engine "holds",
-        # and how that prefix got here ("serve" | "prime")
-        self._kv_prefix: Dict[str, List[int]] = {}
+        # and how that prefix got here ("serve" | "prime"); ordered LRU
+        # (leftmost = next eviction victim)
+        self._kv_prefix: "OrderedDict[str, List[int]]" = OrderedDict()
         self._kv_source: Dict[str, str] = {}
+        self.evictions = 0
         # sim-time each inference stream frees up, valid for _clock_owner's
         # clock (a service reused across clusters restarts at idle)
         self._slot_free_at: List[float] = [0.0] * self.n_slots
@@ -108,6 +119,20 @@ class EchoLLMService:
             batched=False,
             n_slots=self.n_slots,
         )
+
+    def resident_keys(self) -> Dict[str, int]:
+        """Cache key -> resident (virtual) KV token count — the fleet
+        telemetry surface, same shape as SessionCachePool.resident_keys."""
+        return {k: len(v) for k, v in self._kv_prefix.items()}
+
+    def _evict_over_capacity(self) -> None:
+        while (
+            self.session_capacity is not None
+            and len(self._kv_prefix) > self.session_capacity
+        ):
+            victim, _ = self._kv_prefix.popitem(last=False)
+            self._kv_source.pop(victim, None)
+            self.evictions += 1
 
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         """Migration warm-start (analytic twin of InferenceEngine.prime).
@@ -126,9 +151,14 @@ class EchoLLMService:
             if lcp == len(prev):
                 self._kv_prefix[cache_key] = ids  # delta-extend, keep source
                 return True
-        # fresh install (or divergence: stale/edited history replaces it)
+        # fresh install (or divergence: stale/edited history replaces it);
+        # best-effort storage like SessionCachePool.put(low_priority=True) —
+        # a prime must never displace the node's own hot serve entries, so
+        # it parks at the LRU end and is the next eviction victim
         self._kv_prefix[cache_key] = ids
+        self._kv_prefix.move_to_end(cache_key, last=False)
         self._kv_source[cache_key] = "prime"
+        self._evict_over_capacity()
         return True
 
     def crash(self) -> None:
@@ -194,6 +224,7 @@ class EchoLLMService:
                     if usable > 0:
                         hit, reused = True, usable
                         warm = self._kv_source.get(cache_key) == "prime"
+                        self._kv_prefix.move_to_end(cache_key)  # hit -> MRU
         n_prefill = n - reused
         n_gen = min(self.n_generate, max_new_tokens)
         # deterministic "generation": seeded by content so answers differ
@@ -224,7 +255,9 @@ class EchoLLMService:
         )
         if self.kv_reuse and cache_key is not None:
             self._kv_prefix[cache_key] = all_ids + token_ids
+            self._kv_prefix.move_to_end(cache_key)  # serve installs at MRU
             self._kv_source[cache_key] = "serve"
+            self._evict_over_capacity()
         return ServiceResult(
             text=text,
             token_ids=token_ids,

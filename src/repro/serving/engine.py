@@ -557,6 +557,12 @@ class JaxLLMService:
             return False
         return self.engine.prime(cache_key, list(token_ids))
 
+    def resident_keys(self) -> Dict[str, int]:
+        """Cache key -> resident KV token count (fleet telemetry surface —
+        published on the node's heartbeat for residency-aware routing)."""
+        pool = self.engine.session_pool
+        return pool.resident_keys() if pool is not None else {}
+
     def crash(self) -> None:
         """Process crash: the session KV pool is device memory — gone. The
         engine weights/jit caches are treated as re-warmed on restart (we

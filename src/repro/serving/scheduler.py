@@ -823,6 +823,19 @@ class BatchedLLMService:
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         return self.server.prime(cache_key, list(token_ids))
 
+    def resident_keys(self) -> Dict[str, int]:
+        """Cache key -> resident KV token count (fleet telemetry surface).
+        Active slots count too: their KV is on-device and a routed follow-up
+        turn would reuse it once the slot's entry lands in the pool."""
+        pool = self.server.session_pool
+        resident = pool.resident_keys() if pool is not None else {}
+        for st in self.server.slots:
+            if st is not None and st.cache_key is not None:
+                resident[st.cache_key] = max(
+                    resident.get(st.cache_key, 0), st.pos
+                )
+        return resident
+
     def crash(self) -> None:
         """Process crash: drop pending bookkeeping and the server's queue/
         slots/session pool; any already-scheduled pump event is invalidated

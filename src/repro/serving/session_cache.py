@@ -226,6 +226,13 @@ class SessionCachePool:
             self._release(victim)
             self.evictions += 1
 
+    def resident_keys(self) -> Dict[str, int]:
+        """Cache key -> resident token count, for fleet telemetry
+        (docs/architecture.md, "Fleet layer"): the node's heartbeat
+        publishes this map so the router can score keygroup members by KV
+        residency. Read-only — no LRU or counter side effects."""
+        return {k: e.pos for k, e in self._entries.items()}
+
     def peek(self, key: str) -> Optional[CacheEntry]:
         """Return the entry for ``key`` without touching LRU order or the
         hit/miss counters — the warm-start prime path uses this to decide

@@ -318,7 +318,9 @@ def test_restart_with_lost_replica_catches_up_via_anti_entropy():
 
 def test_client_fails_over_to_keygroup_peer_on_crash():
     cluster = build_echo(n_nodes=3)
-    client = LLMClient(cluster, model="m")
+    # pin the failover rotation: this test asserts ring order specifically
+    # (the salted spread has its own test in test_fleet.py)
+    client = LLMClient(cluster, model="m", failover_salt=0)
     client.chat("first turn", "n0")
     cluster.converge()  # context replicated to n1/n2
     cluster.crash("n0")
@@ -397,6 +399,40 @@ def test_node_down_window_recovers_after_plan_interval():
 # ---------------------------------------------------------------------------
 # mini end-to-end churn
 # ---------------------------------------------------------------------------
+
+def test_routed_turn_survives_crash_behind_stale_heartbeat():
+    """Fleet routing under churn (docs/architecture.md, "Fleet layer"):
+    the router's freshest heartbeat for a node predates its crash, so the
+    router still places the session there — the client-side failover
+    backstop must turn that stale decision into a served turn on a peer,
+    never a hung ticket."""
+    cluster = EdgeCluster.build(
+        [f"n{i}" for i in range(3)],
+        lambda nid: EchoLLMService(
+            model="m", vocab_size=32000, kv_reuse=True, tokenize_scale=0.0
+        ),
+        router="residency",
+        # lazy warm start: only the serving node is KV-resident, so the
+        # router provably steers this session back into the crashed node
+        warm_start="off",
+    )
+    client = LLMClient(cluster, model="m", failover_backoff_ms=5.0)
+    first = client.chat("turn one", None)
+    assert first.error is None
+    cluster.converge()                      # replicas + heartbeats settled
+    home = first.served_by
+    router = cluster.router
+    assert router.reports[home].resident    # router knows the session lives here
+
+    cluster.crash(home)                     # heartbeat now lies: report is stale
+    ticket = client.submit("turn two", None)
+    cluster.run_until_quiet()
+    assert ticket.done and ticket.response.error is None
+    assert ticket.nodes_tried[0] == home    # routed into the crash...
+    assert ticket.response.served_by != home  # ...failover resolved it
+    assert ticket.response.turn == 2        # on the replicated context
+    assert cluster.network.pending_events == 0  # and the bus went quiet
+
 
 def test_mini_churn_run_converges_and_leaves_no_hung_tickets():
     """Small end-to-end churn: roaming tenants + a crash/restart cycle +
