@@ -12,6 +12,7 @@ import sys
 
 
 def main() -> None:
+    from .chunked_prefill_bench import chunked_prefill_bench
     from .churn_bench import churn_bench
     from .concurrency_bench import concurrency_bench
     from .fleet_bench import fleet_bench
@@ -35,7 +36,7 @@ def main() -> None:
     benches = ALL_FIGURES + [
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
         concurrency_bench, paged_kv_bench, paged_attn_bench, churn_bench,
-        shared_prefix_bench, fleet_bench,
+        shared_prefix_bench, fleet_bench, chunked_prefill_bench,
     ]
     for bench in benches:
         tag = bench.__name__

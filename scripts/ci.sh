@@ -38,6 +38,9 @@ python -m benchmarks.churn_bench --smoke
 echo "== smoke: fleet routing (residency vs baselines under churn, echo only) =="
 python -m benchmarks.fleet_bench --smoke
 
+echo "== smoke: chunked paged prefill (budget-independent outputs, latency fields) =="
+python -m benchmarks.chunked_prefill_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Environment for benchmark runs (source it, don't execute):
+#
+#   source scripts/env.sh
+#   PYTHONPATH=src python -m benchmarks.run
+#
+# Latency benchmarks (chunked_prefill_bench in particular) measure per-step
+# wall clocks on the host, so allocator noise and XLA log spam show up
+# directly in the reported percentiles — pin them down here.
+
+# tcmalloc: faster malloc, and per-step allocation jitter stops leaking into
+# decode-gap percentiles. Skipped silently where the library isn't present.
+_tcmalloc=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -f "$_tcmalloc" ]]; then
+    export LD_PRELOAD="$_tcmalloc"
+fi
+# no large-alloc warnings from numpy/XLA host buffers
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+# silence TF/XLA C++ logging (it interleaves with the CSV output)
+export TF_CPP_MIN_LOG_LEVEL=4
+
+# One XLA host device per hardware thread so pmap-style sweeps can use them;
+# step markers at the outer while loop keep profiles legible.
+_ncpu=$(nproc 2>/dev/null || echo 1)
+export XLA_FLAGS="--xla_force_host_platform_device_count=${_ncpu} --xla_step_marker_location=1${XLA_FLAGS:+ $XLA_FLAGS}"
+
+unset _tcmalloc _ncpu

@@ -151,6 +151,11 @@ class ServiceResult:
     # free stream/slot, and the peak decode batch this request shared.
     queue_ms: float = 0.0
     batch_size: int = 1
+    # Token-level latency: time to first generated token and per-token
+    # decode gap percentiles (see protocol.Timing for semantics).
+    ttft_ms: float = 0.0
+    decode_p50_ms: float = 0.0
+    decode_p99_ms: float = 0.0
 
 
 @dataclass
@@ -435,6 +440,9 @@ class ContextManager:
         timing.kv_reused_tokens = result.reused_tokens
         timing.prefill_tokens = result.prefill_tokens
         timing.kv_warm_start = result.warm_start
+        timing.ttft_ms = result.ttft_ms
+        timing.decode_p50_ms = result.decode_p50_ms
+        timing.decode_p99_ms = result.decode_p99_ms
 
         n_ctx = len(pt.context_ids) if req.mode is ContextMode.TOKENIZED else 0
         resp = Response(

@@ -82,6 +82,14 @@ class Timing:
     # batch size this request shared the engine with (1 = single-stream).
     queue_ms: float = 0.0
     batch_size: int = 1
+    # Token-level latency (chunked paged prefill, docs/architecture.md):
+    # submit -> first generated token determined, and the per-token decode
+    # gap distribution. For a resident tenant, p99 captures the bounded
+    # bump other tenants' prefill chunks add to its steps — the metric the
+    # per-step chunk budget holds flat where a monolithic prefill stalls.
+    ttft_ms: float = 0.0
+    decode_p50_ms: float = 0.0
+    decode_p99_ms: float = 0.0
 
     @property
     def response_time_ms(self) -> float:

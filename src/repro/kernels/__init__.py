@@ -10,8 +10,10 @@ Each kernel ships three artifacts (per the repo convention):
 - ``ref.py``    — pure-jnp oracle the kernel is validated against
                   (interpret=True on CPU; Mosaic on TPU).
 
-Kernels: flash_attention (prefill), decode_attention (flash-decode),
+Kernels: flash_attention (dense prefill), decode_attention (flash-decode),
 paged_attention (flash-decode through a page table — the paged serving
-path's decode inner loop, no gather-materialize), ssd (Mamba2 intra-chunk
+path's decode inner loop, no gather-materialize), chunked_prefill (an
+S-token prompt chunk attending through the page table — the chunked paged
+admission path, no dense intermediate), ssd (Mamba2 intra-chunk
 state-space dual).
 """

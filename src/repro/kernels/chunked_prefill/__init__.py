@@ -1,0 +1,12 @@
+from . import ops, ref
+from .kernel import chunked_prefill_pallas
+from .ops import chunked_prefill_attention
+from .ref import chunked_prefill_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "chunked_prefill_attention",
+    "chunked_prefill_pallas",
+    "chunked_prefill_ref",
+]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for chunked paged prefill attention: linearize the page
+table and take the exact masked softmax of S chunk rows against it.
+
+Validity is derived from the layout invariant rather than a kv_pos input
+(slot index == absolute position, written contiguously): slot ``t`` holds
+real K/V exactly when ``t < p0 + true_len``. Padded chunk rows
+(``r >= true_len``) return exact zeros here — the kernel leaves garbage in
+them instead; both conventions are fine because those rows are never read.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_prefill_ref(
+    q: jnp.ndarray,           # (B, S, H, Dh) — rope'd chunk queries
+    pool_k: jnp.ndarray,      # (P, page_size, KV, Dh) — post-scatter pool
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,  # (B, MP) physical page ids per lane
+    p0: jnp.ndarray,          # (B,) absolute position of chunk row 0
+    true_len: jnp.ndarray,    # (B,) real chunk lengths (bucketed input)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kvh = pool_k.shape[2]
+    g = h // kvh
+    k = pool_k[page_table].reshape(b, -1, kvh, dh)   # (B, MP*ps, KV, Dh)
+    v = pool_v[page_table].reshape(b, -1, kvh, dh)
+    t = k.shape[1]
+    qq = q.reshape(b, s, kvh, g, dh).astype(jnp.float32)
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qq, k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = p0[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, S)
+    kv_slot = jnp.arange(t, dtype=jnp.int32)[None, :]               # (1, T)
+    valid = kv_slot < (p0 + true_len)[:, None]                      # (B, T)
+    mask = valid[:, None, :] & (kv_slot[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        mask = mask & (q_pos[:, :, None] - kv_slot[:, None, :] < window)
+    mask = mask[:, None, None, :, :]                    # (B, 1, 1, S, T)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m) * mask.astype(jnp.float32)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkgst,btkd->bskgd", p / l, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)

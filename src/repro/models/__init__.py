@@ -8,7 +8,7 @@ from .transformer import (
     layer_groups,
     make_decode_caches,
 )
-from .prefill import prefill, prefill_append, supports_append
+from .prefill import prefill, prefill_append, prefill_chunk_paged, supports_append
 
 __all__ = [
     "ModelConfig",
@@ -21,5 +21,6 @@ __all__ = [
     "make_decode_caches",
     "prefill",
     "prefill_append",
+    "prefill_chunk_paged",
     "supports_append",
 ]

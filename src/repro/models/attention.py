@@ -264,6 +264,74 @@ def attention_append(
     return out, ck, cv
 
 
+def attention_chunk_paged(
+    p: Params,
+    x: jnp.ndarray,              # (B,S,D) — a chunk of prompt tokens
+    positions: jnp.ndarray,      # (B,S) or (3,B,S) absolute positions
+    valid: jnp.ndarray,          # (B,S) bool — False for bucket padding
+    pool_k: jnp.ndarray,         # (P, ps, KV, Dh) — shared page pool, one layer
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,     # (B, MP) physical page ids per lane
+    p0: jnp.ndarray,             # (B,) absolute position of chunk row 0
+    true_len: jnp.ndarray,       # (B,) real chunk lengths
+    cfg: ModelConfig,
+    window: int = 0,
+    n_skip: int = 0,
+    lin_k: Optional[jnp.ndarray] = None,  # (B, MP*ps, KV, Dh) pre-gathered view
+    lin_v: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked paged prefill: S prompt tokens mid-sequence, K/V scattered
+    straight into their page cells *before* attention (the paged sibling of
+    :func:`attention_append` — intra-chunk causality falls out of the
+    positional mask), then attended through the page table. No dense
+    ``max_len``-width cache is ever built.
+
+    - ``pallas`` — ``repro.kernels.chunked_prefill``: page-table index maps
+      with scalar-prefetched per-lane bounds, one page DMA per grid step.
+    - ``reference`` — the caller's hoisted gathered view (``lin_k/lin_v``,
+      pre-scatter) gets the chunk inserted at its absolute slots here, and
+      the standard position-masked SDPA runs over it — bit-identical to
+      gathering after the scatter.
+
+    Validity needs no kv_pos array: the layout invariant (slot == absolute
+    position, written contiguously) makes slot ``t`` valid exactly when
+    ``t < p0 + true_len``. Returns (attn output, new pool_k, new pool_v)."""
+    from .cache import gather_pages, paged_write_chunk
+
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    b, s, _ = x.shape
+    ps = pool_k.shape[1]
+    q, k, v = qkv_project(p, x, positions, cfg)
+    pk, pv = paged_write_chunk(
+        pool_k, pool_v, k, v, pos1d, valid, page_table, ps, n_skip=n_skip
+    )
+    if cfg.attn_impl == "pallas":
+        from ..kernels.chunked_prefill import ops as chunk_ops
+
+        out = chunk_ops.chunked_prefill_attention(
+            q, pk, pv, page_table, p0, true_len,
+            window=window, softcap=cfg.attn_softcap,
+        )
+        out = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+        return out, pk, pv
+
+    ck = lin_k if lin_k is not None else gather_pages(pool_k, page_table)
+    cv = lin_v if lin_v is not None else gather_pages(pool_v, page_table)
+    t = ck.shape[1]
+    bidx = jnp.arange(b)[:, None]
+    # mirror the pool scatter's drop set on the linear view: padding rows
+    # and shared-page slots redirect out of range
+    w_pos = jnp.where(valid & (pos1d >= n_skip * ps), pos1d, t)
+    ck = ck.at[bidx, w_pos].set(k.astype(ck.dtype), mode="drop")
+    cv = cv.at[bidx, w_pos].set(v.astype(cv.dtype), mode="drop")
+    slot = jnp.arange(t, dtype=jnp.int32)[None, :]
+    kv_valid = slot < (p0 + true_len)[:, None]
+    kv_pos = jnp.where(kv_valid, slot, -1)
+    out = _sdpa_reference(q, ck, cv, pos1d, kv_pos, kv_valid, cfg, window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]
+    return out, pk, pv
+
+
 def project_kv_step(
     p: Params, x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:

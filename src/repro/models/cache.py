@@ -175,6 +175,40 @@ def paged_write_step(
     return pk, pv
 
 
+def paged_write_chunk(
+    pool_k: jnp.ndarray,    # (P, ps, KV, Dh) one layer
+    pool_v: jnp.ndarray,
+    k_new: jnp.ndarray,     # (B, S, KV, Dh) — a prefill chunk's rotated K
+    v_new: jnp.ndarray,
+    q_pos: jnp.ndarray,     # (B, S) absolute position of each chunk token
+    valid: jnp.ndarray,     # (B, S) bool — False for bucket padding
+    page_table: jnp.ndarray,  # (B, MP)
+    page_size: int,
+    n_skip: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a prefill chunk's K/V into their (page, offset) cells — the
+    multi-token sibling of :func:`paged_write_step`, and the write half of
+    chunked paged prefill (prefill output lands straight in pages, no dense
+    intermediate). Dropped via the same out-of-range sentinel +
+    ``mode="drop"``: bucket-padding tokens (``valid`` False), positions past
+    the table, and writes landing in the first ``n_skip`` pages —
+    shared-prefix pages another session owns are read-only by construction,
+    so a caller that starts a chunk inside a shared region redirects those
+    slots to nowhere instead of corrupting the donor."""
+    b, s = q_pos.shape
+    mp = page_table.shape[1]
+    n_pages = pool_k.shape[0]
+    bidx = jnp.arange(b)[:, None]
+    page_idx = q_pos // page_size
+    phys = page_table[bidx, jnp.clip(page_idx, 0, mp - 1)]
+    drop = (~valid) | (page_idx >= mp) | (page_idx < n_skip) | (q_pos < 0)
+    phys = jnp.where(drop, n_pages, phys)            # OOB sentinel -> dropped
+    slot = q_pos % page_size
+    pk = pool_k.at[phys, slot].set(k_new.astype(pool_k.dtype), mode="drop")
+    pv = pool_v.at[phys, slot].set(v_new.astype(pool_v.dtype), mode="drop")
+    return pk, pv
+
+
 def gather_pages_stacked(
     pool_k: jnp.ndarray,      # (L, P, ps, KV, Dh) — a layer group's K pool
     pool_v: jnp.ndarray,

@@ -12,8 +12,14 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_append, attention_forward
-from .cache import Cache, append_kv_pos, prefill_kv_pos, ring_from_prefill
+from .attention import attention_append, attention_chunk_paged, attention_forward
+from .cache import (
+    Cache,
+    append_kv_pos,
+    gather_pages_stacked,
+    prefill_kv_pos,
+    ring_from_prefill,
+)
 from .config import ModelConfig
 from .layers import dtype_of, embed_tokens, mlp_forward, rms_norm, unembed
 from .moe import moe_forward
@@ -277,3 +283,117 @@ def prefill_append(
     logits = unembed(params["embed"], last, cfg)
     next_pos = (p0 + n_new).astype(jnp.int32)
     return logits[:, 0], new_caches, next_pos
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked prefill — prompt chunks land straight in KV pages
+# ---------------------------------------------------------------------------
+
+def _dense_block_chunk_paged(
+    bp, x, positions, valid, pk, pv, page_table, p0, true_len, cfg,
+    n_skip, lin_k=None, lin_v=None,
+):
+    h, nk, nv = attention_chunk_paged(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions, valid,
+        pk, pv, page_table, p0, true_len, cfg,
+        n_skip=n_skip, lin_k=lin_k, lin_v=lin_v,
+    )
+    x = x + h
+    x = x + mlp_forward(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x, nk, nv
+
+
+def _moe_block_chunk_paged(
+    bp, x, positions, valid, pk, pv, page_table, p0, true_len, cfg,
+    n_skip, lin_k=None, lin_v=None,
+):
+    h, nk, nv = attention_chunk_paged(
+        bp["attn"], rms_norm(x, bp["norm1"], cfg.norm_eps), positions, valid,
+        pk, pv, page_table, p0, true_len, cfg,
+        n_skip=n_skip, lin_k=lin_k, lin_v=lin_v,
+    )
+    x = x + h
+    m, _ = moe_forward(bp["moe"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg)
+    return x + m, nk, nv
+
+
+def prefill_chunk_paged(
+    params: Params,
+    cfg: ModelConfig,
+    pools: List[Cache],           # per group: {"k","v"} (L, P, ps, KV, Dh)
+    page_table: jnp.ndarray,      # (B, MP) physical page ids per lane
+    tokens: jnp.ndarray,          # (B,S) prompt chunk (bucketed)
+    p0: jnp.ndarray,              # (B,) absolute position of chunk row 0
+    true_len: jnp.ndarray,        # (B,) real chunk lengths
+    n_skip: int = 0,
+) -> Tuple[jnp.ndarray, List[Cache]]:
+    """Prefill a prompt chunk *directly into KV pages*: each layer scatters
+    the chunk's rotated K/V into page cells through the page table before
+    attending (the paged sibling of :func:`prefill_append` — no dense
+    ``max_len``-width intermediate ever exists). The chunk attends against
+    the lane's whole causal prefix ``[0, p0 + true_len)``, so chunk N sees
+    everything chunks 0..N-1 (and any shared-prefix pages) already wrote.
+
+    ``n_skip`` pages at the front of each lane's table are treated as
+    read-only (shared-prefix pages from another session) — the scatter
+    drops any write below ``n_skip * page_size``, attention still reads
+    them. Rows beyond ``true_len`` are bucket padding: their pool writes
+    are dropped and their outputs are garbage that no one reads.
+
+    Pure function; jit with donate_argnums on pools. Returns
+    (logits at row ``true_len - 1`` (B,V), new pools). Full-cache dense/moe
+    groups only (:func:`supports_append`); same kernel/reference dispatch
+    and per-step hoisted gather as ``decode_step_paged``."""
+    assert supports_append(cfg), (
+        "prefill_chunk_paged requires full-cache dense/moe groups "
+        f"(arch={cfg.arch_type}, attn_variant={cfg.attn_variant})"
+    )
+    b, s = tokens.shape[0], tokens.shape[1]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    p0 = p0.astype(jnp.int32)
+    true_len = true_len.astype(jnp.int32)
+    q_pos = p0[:, None] + idx[None, :]                             # (B,S)
+    valid = idx[None, :] < true_len[:, None]
+    positions = (
+        jnp.broadcast_to(q_pos, (3, b, s)) if cfg.rope_style == "mrope" else q_pos
+    )
+    x = embed_tokens(params["embed"], tokens, cfg).astype(dtype_of(cfg.compute_dtype))
+    use_kernel = cfg.attn_impl == "pallas"
+
+    new_pools: List[Cache] = []
+    for spec, gp, pool in zip(layer_groups(cfg), params["groups"], pools):
+        assert spec.kind in ("dense", "moe"), spec.kind
+        block = (
+            _dense_block_chunk_paged if spec.kind == "dense"
+            else _moe_block_chunk_paged
+        )
+
+        if use_kernel:
+            xs = (gp, pool["k"], pool["v"])
+
+            def body(x, scanned, _block=block):
+                bp, pk, pv = scanned
+                x, nk, nv = _block(
+                    bp, x, positions, valid, pk, pv, page_table, p0,
+                    true_len, cfg, n_skip,
+                )
+                return x, (nk, nv)
+        else:
+            lin_k, lin_v = gather_pages_stacked(pool["k"], pool["v"], page_table)
+            xs = (gp, pool["k"], pool["v"], lin_k, lin_v)
+
+            def body(x, scanned, _block=block):
+                bp, pk, pv, lk, lv = scanned
+                x, nk, nv = _block(
+                    bp, x, positions, valid, pk, pv, page_table, p0,
+                    true_len, cfg, n_skip, lk, lv,
+                )
+                return x, (nk, nv)
+
+        x, (nk, nv) = scan_or_unroll(body, x, xs, cfg)
+        new_pools.append({"k": nk, "v": nv})
+
+    n = jnp.maximum(true_len, 1)
+    last = x[jnp.arange(b), n - 1][:, None, :]
+    logits = unembed(params["embed"], last, cfg)
+    return logits[:, 0], new_pools

@@ -1,0 +1,193 @@
+"""Chunked paged prefill driver — prompt tokens land straight in KV pages.
+
+The paged serving paths (batched scheduler admission, single-stream engine,
+migration warm-start prime) all prefill through this one driver: the prompt
+is split into page-aligned chunks and each chunk is computed by
+:func:`repro.models.prefill_chunk_paged`, which scatters its K/V into the
+allocator's page pool *through the page table* before attending. No dense
+``max_len``-width intermediate cache ever exists and no write-through copy
+runs afterwards — pages ARE the prefill destination.
+
+Compile bounding: chunk token widths are bucketed to power-of-two multiples
+of the page size and the attention table width to a power-of-two page
+count, so the jitted chunk function compiles at most
+O(log(max_chunk/page_size) * log(max_pages)) shapes. ``n_skip`` (leading
+read-only shared-prefix pages) is a traced scalar, not a compile key.
+
+The per-call unit is one B=1 chunk (``run_chunk``): the batched scheduler
+interleaves these with its batched decode under a per-step token budget
+(Sarathi-style unified steps — see ``serving/scheduler.py``), while the
+engine and prime paths drain a whole suffix in one loop (``prefill_ids``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig
+from ..models.prefill import prefill_chunk_paged
+from .paged_kv import PagedKVAllocator
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class PagedPrefiller:
+    """Runs chunked paged prefill against one allocator's page pool.
+
+    Stateless between calls except for the jit cache; the caller owns page
+    allocation, sharing/refcounts, and chunk scheduling — this class only
+    moves tokens into pages and returns last-valid-position logits."""
+
+    def __init__(
+        self, cfg: ModelConfig, params, allocator: PagedKVAllocator
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.alloc = allocator
+        self._fns: Dict[Tuple[int, int], object] = {}
+
+    def _fn(self, s: int, mp: int):
+        """Jitted chunk step for (chunk width s, table width mp pages)."""
+        key = (s, mp)
+        if key not in self._fns:
+            cfg = self.cfg
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def fn(params, pools, table, tokens, p0, true_len, n_skip):
+                return prefill_chunk_paged(
+                    params, cfg, pools, table, tokens, p0, true_len,
+                    n_skip=n_skip,
+                )
+
+            self._fns[key] = fn
+        return self._fns[key]
+
+    def run_chunk(
+        self,
+        pages: Sequence[int],
+        chunk_ids: Sequence[int],
+        p0: int,
+        n_skip: int = 0,
+    ) -> jnp.ndarray:
+        """Prefill one chunk of ``chunk_ids`` at absolute offset ``p0``
+        straight into ``pages`` (the lane's page list; slots beyond the
+        chunk's reach are never touched). Returns the logits at the chunk's
+        last token, shape (V,). ``n_skip`` leading pages are read-only
+        shared-prefix pages — attention reads them, writes to them are
+        dropped."""
+        alloc = self.alloc
+        ps = alloc.page_size
+        c = len(chunk_ids)
+        assert c > 0
+        # chunk bucket: pow2 multiple of the page size; table width: pow2
+        # page count covering the causal prefix [0, p0 + c)
+        s = ps * _pow2(-(-c // ps))
+        mp = _pow2(alloc.pages_for(p0 + c))
+        assert len(pages) >= alloc.pages_for(p0 + c), (len(pages), p0, c)
+        # table beyond the lane's pages pads with the scratch page — never
+        # read (the kernel's bound and the reference mask both stop at
+        # p0 + true_len) and never written (writes land below p0 + c)
+        table = alloc.table_for(list(pages)[:mp], mp * ps)
+        toks = np.zeros((1, s), np.int32)
+        toks[0, :c] = np.asarray(chunk_ids, np.int32) % self.cfg.vocab_size
+        logits, pools = self._fn(s, mp)(
+            self.params, alloc.pools, jnp.asarray(table)[None, :],
+            jnp.asarray(toks), jnp.array([p0], jnp.int32),
+            jnp.array([c], jnp.int32), jnp.int32(n_skip),
+        )
+        alloc.pools = pools
+        return logits[0]
+
+    def prefill_ids(
+        self,
+        pages: Sequence[int],
+        token_ids: Sequence[int],
+        start: int,
+        n_skip: int = 0,
+        chunk: int = 256,
+    ) -> jnp.ndarray:
+        """Drain the whole suffix ``token_ids[start:]`` into ``pages`` in
+        ``chunk``-capped steps (the single-stream and prime paths — no
+        decode to interleave with). Returns the final logits (V,)."""
+        token_ids = list(token_ids)
+        n = len(token_ids)
+        logits: Optional[jnp.ndarray] = None
+        i = start
+        while i < n:
+            c = min(chunk, n - i)
+            logits = self.run_chunk(
+                pages, token_ids[i : i + c], i, n_skip=n_skip
+            )
+            i += c
+        assert logits is not None, (start, n)
+        return logits
+
+
+def prime_fill_pages(
+    pool,
+    prefiller: PagedPrefiller,
+    token_ids: Sequence[int],
+    entry,
+    usable: int,
+) -> Optional[List[int]]:
+    """Chunk-prefill ``token_ids`` straight into pages for a session-pool
+    entry — the paged warm-start prime path, shared by the batched
+    scheduler and the single-stream engine (their ``prime_session_pool``
+    callbacks). Off the serving hot path, no decode to interleave with, so
+    the whole suffix drains in one loop.
+
+    Shares the matched ``entry``'s full pages (tail page device-copied when
+    its coverage ends mid-page) or a cross-session content-index run; no
+    ``n - 1`` coverage cap like admission — prime needs no logits, so a
+    fully-covering share is a pure-incref prime. Returns the page list
+    (refs owned by the caller's entry-to-be) or None when the pool can't
+    cover the context: prime is best-effort and never reclaims other
+    sessions' entries."""
+    alloc = prefiller.alloc
+    ps = alloc.page_size
+    token_ids = list(token_ids)
+    n = len(token_ids)
+    tail_src: Optional[int] = None
+    if entry is not None and usable > 0:
+        cover = usable
+        shared = list(entry.pages[: cover // ps])
+        if cover % ps:
+            tail_src = entry.pages[cover // ps]
+    else:
+        shared = list(alloc.match_prefix(token_ids, n))
+        cover = len(shared) * ps
+    skip = len(shared)
+    fresh_needed = alloc.pages_for(n) - skip
+    if fresh_needed > alloc.n_free:
+        return None
+    if shared:
+        # incref before alloc: allocation never evicts here (prime does not
+        # reclaim), but keep the same discipline as admission
+        alloc.incref(shared)
+    fresh = alloc.alloc(fresh_needed)
+    if fresh is None:
+        if shared:
+            alloc.decref(shared)
+        return None
+    pages = shared + fresh
+    if tail_src is not None:
+        alloc.copy_page(tail_src, fresh[0])
+    if cover < n:
+        prefiller.prefill_ids(pages, token_ids, cover, n_skip=skip)
+    # the prime's compute must finish inside the off-hot-path window
+    # (client think time), not contend with the next serving turn
+    jax.block_until_ready(alloc.pools)
+    if pool is not None and shared and entry is None:
+        pool.shared_hits += 1
+        pool.shared_tokens += cover
+    return pages

@@ -47,6 +47,7 @@ from ..store.network import Network
 from ..models import (
     ModelConfig,
     decode_step,
+    decode_step_paged,
     init_params,
     prefill,
     prefill_append,
@@ -54,6 +55,7 @@ from ..models import (
 )
 from ..models.cache import trim_cache_prefix
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
+from .chunked_prefill import PagedPrefiller, prime_fill_pages
 from .sampling import sample
 from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
 
@@ -123,6 +125,7 @@ def prime_session_pool(
     max_input: int,
     append_fn: Callable,   # (base_caches, suffix_ids, p0) -> (logits, caches, pos)
     prefill_fn: Callable,  # (ids) -> (logits, caches, pos)
+    paged_fill: Optional[Callable] = None,  # (ids, entry|None, usable) -> pages|None
 ) -> Tuple[bool, bool]:
     """Migration warm-start core shared by the single-stream engine and the
     batched scheduler (their ``prime`` methods differ only in the compute
@@ -161,6 +164,26 @@ def prime_session_pool(
             return True, False          # already warm (covers everything)
         else:
             usable = lcp                # == entry.pos: extend the delta
+    if (
+        paged_fill is not None and pool.allocator is not None
+        and (usable == 0 or entry.paged)
+    ):
+        # Paged prime: the KV is chunk-prefilled straight into fresh pages
+        # (repro/serving/chunked_prefill.py) — no dense lane, no store
+        # scatter. The callback owns sharing/feasibility (it never
+        # reclaims); a dense matched entry (mixed-topology pool) falls
+        # through to the dense route below instead.
+        pages = paged_fill(token_ids, entry if usable > 0 else None, usable)
+        if pages is None:
+            return False, False
+        source = entry.source if usable > 0 else "prime"
+        pool.put(
+            cache_key,
+            CacheEntry(token_ids=list(token_ids), pages=pages, source=source),
+            low_priority=True,
+        )
+        pool.primes += 1
+        return True, True
     # Cross-session shared prefix: another session's resident pages matching
     # this context shrink both the prefill (gather + delta instead of full)
     # and the page budget the final put will need (its store shares them).
@@ -214,6 +237,9 @@ class GenerateResult:
     inference_ms: float = 0.0    # hot path: prefill + decode (pool update excluded)
     cache_update_ms: float = 0.0  # session-pool update, off the hot path
     warm_start: bool = False     # hit entry was installed by prime() (migration)
+    ttft_ms: float = 0.0         # start -> first generated token determined
+    decode_p50_ms: float = 0.0   # per-token decode latency percentiles
+    decode_p99_ms: float = 0.0   # (amortized over each host-sync window)
 
 
 @dataclass
@@ -230,10 +256,15 @@ class InferenceEngine:
     _prefill_cache: Dict[int, object] = field(default_factory=dict, repr=False)
     _append_cache: Dict[int, object] = field(default_factory=dict, repr=False)
     _decode_fn: Optional[object] = field(default=None, repr=False)
+    _paged_decode_cache: Dict[int, object] = field(default_factory=dict, repr=False)
+    _prefiller: Optional[object] = field(default=None, repr=False)
 
     # Migration warm-start accounting (prime() runs off the serving hot path)
     prime_count: int = 0
     prime_ms: float = 0.0
+    # keyed generations that had to leave the paged route (dense pool entry
+    # from a mixed-topology pool, or page exhaustion at admission)
+    paged_fallbacks: int = 0
 
     @classmethod
     def create(
@@ -314,6 +345,29 @@ class InferenceEngine:
             self._decode_fn = fn
         return self._decode_fn
 
+    def _paged_prefiller(self) -> PagedPrefiller:
+        """Chunked paged prefill driver bound to the pool's allocator
+        (lazy: only keyed paged generations and paged primes need it)."""
+        if self._prefiller is None:
+            self._prefiller = PagedPrefiller(
+                self.cfg, self.params, self.session_pool.allocator
+            )
+        return self._prefiller
+
+    def _paged_decode_fn(self, w: int):
+        """B=1 paged decode, jitted once per power-of-two table width."""
+        if w not in self._paged_decode_cache:
+            cfg = self.cfg
+
+            @partial(jax.jit, donate_argnums=(1, 3))
+            def fn(params, pools, table, kv_pos, tokens, pos):
+                return decode_step_paged(
+                    params, cfg, pools, table, kv_pos, tokens, pos
+                )
+
+            self._paged_decode_cache[w] = fn
+        return self._paged_decode_cache[w]
+
     # -- prefill paths ------------------------------------------------------
     def _full_prefill(self, input_ids: List[int]):
         n = len(input_ids)
@@ -353,10 +407,17 @@ class InferenceEngine:
         reserve 16). Returns True when the pool now holds KV for the full
         sequence."""
         t0 = time.perf_counter()
+        pool = self.session_pool
+        paged_fill = None
+        if pool is not None and pool.allocator is not None:
+            paged_fill = lambda ids, entry, usable: prime_fill_pages(  # noqa: E731
+                pool, self._paged_prefiller(), ids, entry, usable
+            )
         warm, stored = prime_session_pool(
-            self.session_pool, cache_key, list(token_ids),
+            pool, cache_key, list(token_ids),
             self.max_len, self.max_len - 1 - 16,
             self._append_prefill, self._full_prefill,
+            paged_fill=paged_fill,
         )
         if stored:
             self.prime_count += 1
@@ -372,11 +433,199 @@ class InferenceEngine:
         cache_key: Optional[str] = None,
     ) -> GenerateResult:
         """Single-sequence generation (the Context Manager path), with
-        optional session-level KV-cache reuse when ``cache_key`` is given."""
+        optional session-level KV-cache reuse when ``cache_key`` is given.
+
+        With a page-pool-backed session pool, keyed generations run fully
+        paged (:meth:`_generate_paged`): chunked prefill straight into
+        pages, paged decode against the page table — no ``max_len``-width
+        dense cache is ever allocated for the sequence. Keyless requests
+        stay on the dense-transient route (their cache dies with the call;
+        pages would only add table indirection), as do the rare paged
+        misfits (dense entry from a mixed-topology pool, page exhaustion) —
+        counted in ``paged_fallbacks``."""
         input_ids = list(input_ids)
         n = len(input_ids)
         assert n + max_new_tokens <= self.max_len, (n, max_new_tokens, self.max_len)
+        pool = self.session_pool if cache_key is not None else None
+        if pool is not None and pool.allocator is not None:
+            res = self._generate_paged(
+                input_ids, max_new_tokens, temperature, cache_key
+            )
+            if res is not None:
+                return res
+            self.paged_fallbacks += 1
+        return self._generate_dense(
+            input_ids, max_new_tokens, temperature, cache_key
+        )
 
+    def _generate_paged(
+        self,
+        input_ids: List[int],
+        max_new_tokens: int,
+        temperature: float,
+        cache_key: str,
+    ) -> Optional[GenerateResult]:
+        """Keyed generation straight on the page pool: admission plans
+        pages exactly like the batched scheduler (entry share with
+        tail-page copy, cross-session content-index share, fresh pages out
+        to ``n + 1``), the prompt chunk-prefills directly into them, and
+        decode runs :func:`repro.models.decode_step_paged` at a
+        power-of-two table width with grow-on-demand per host-sync window.
+        Returns None (nothing allocated, nothing counted) when the pool
+        can't serve this request — the caller falls back to the dense
+        route."""
+        pool = self.session_pool
+        alloc = pool.allocator
+        ps = alloc.page_size
+        n = len(input_ids)
+        t0 = time.perf_counter()
+
+        entry, usable = pool.match(cache_key, input_ids)
+        if entry is not None and not entry.paged:
+            return None  # mixed-topology pool: a dense entry matched
+        usable = min(usable, n - 1)
+        cross = alloc.match_prefix(input_ids, n - 1)
+        kind, cover = ("entry", usable) if usable > 0 else ("none", 0)
+        if len(cross) * ps > cover:
+            kind, cover = "cross", len(cross) * ps
+        warm = kind == "entry" and entry.source == "prime"
+        skip = cover // ps
+        tail_src: Optional[int] = None
+        if kind == "entry" and cover % ps:
+            tail_src = entry.pages[skip]
+        shared = (
+            list(entry.pages[:skip]) if kind == "entry"
+            else list(cross[:skip]) if kind == "cross"
+            else []
+        )
+        if shared:
+            # incref before reclaim: eviction must not free the donor pages
+            alloc.incref(shared)
+        fresh = self._alloc_paged(
+            alloc.pages_for(n + 1) - skip, exclude=cache_key
+        )
+        if fresh is None:
+            if shared:
+                alloc.decref(shared)
+            return None
+        pages = shared + fresh
+        if tail_src is not None:
+            alloc.copy_page(tail_src, fresh[0])
+        if kind == "cross":
+            pool.shared_hits += 1
+            pool.shared_tokens += cover
+
+        logits = self._paged_prefiller().prefill_ids(
+            pages, input_ids, cover, n_skip=skip, chunk=self.append_chunk
+        )
+        tok = sample(logits[None, :], temperature=temperature)
+        jax.block_until_ready(tok)
+        ttft_ms = (time.perf_counter() - t0) * 1e3
+
+        # decode with batched host sync, same contract as the dense route;
+        # the table grows page-by-page ahead of each window's writes, and a
+        # window the pool can't back is truncated (generation stops early
+        # with the tokens it has — never a silent dropped write)
+        iota = jnp.arange(self.max_len, dtype=jnp.int32)
+        kv_full = jnp.where(iota < n, iota, -1)[None, :]
+        out: List[int] = []
+        gaps: List[float] = []
+        pos_abs = n
+        remaining = max_new_tokens
+        stopped = early = False
+        while remaining > 0 and not stopped and not early:
+            wsteps = min(self.sync_every, remaining)
+            need = alloc.pages_for(pos_abs + wsteps)
+            if need > len(pages):
+                more = self._alloc_paged(need - len(pages), exclude=cache_key)
+                if more is None:
+                    early = True
+                    wsteps = min(wsteps, len(pages) * ps - pos_abs)
+                    if wsteps <= 0:
+                        break
+                else:
+                    pages = pages + more
+            w = 1
+            while w < len(pages):
+                w *= 2
+            w = min(w, self.max_len // ps)
+            wp = w * ps
+            table = jnp.asarray(alloc.table_for(pages, wp))[None, :]
+            fn = self._paged_decode_fn(w)
+            t_w = time.perf_counter()
+            window = []
+            for _ in range(wsteps):
+                window.append(tok)
+                logits, pools, kvp = fn(
+                    self.params, alloc.pools, table, kv_full[:, :wp],
+                    tok[:, None], jnp.array([pos_abs], jnp.int32),
+                )
+                alloc.pools = pools
+                kv_full = kv_full.at[:, :wp].set(kvp)
+                pos_abs += 1
+                tok = sample(logits[:, 0], temperature=temperature)
+            remaining -= wsteps
+            host = np.asarray(jnp.stack(window)[:, 0])   # single device sync
+            gap = (time.perf_counter() - t_w) * 1e3 / wsteps
+            for t in host:
+                out.append(int(t))
+                gaps.append(gap)
+                if int(t) in self.stop_tokens:
+                    stopped = True
+                    break
+        inference_ms = (time.perf_counter() - t0) * 1e3
+
+        # write-back MOVES the pages into the pool entry (zero-copy): every
+        # emitted token's KV is in its page; pages past the kept prefix are
+        # freed. Stale bytes inside the tail page beyond the prefix are
+        # never causal for a future reuse (coverage-capped + masked).
+        t1 = time.perf_counter()
+        prefix = input_ids + out
+        keep = alloc.pages_for(len(prefix))
+        if keep < len(pages):
+            alloc.decref(pages[keep:])
+        pool.put(
+            cache_key,
+            CacheEntry(token_ids=prefix, pages=pages[:keep], source="serve"),
+        )
+        cache_update_ms = (time.perf_counter() - t1) * 1e3
+
+        return GenerateResult(
+            token_ids=out,
+            cache_hit=cover > 0,
+            reused_tokens=cover,
+            prefill_tokens=n - cover,
+            inference_ms=inference_ms,
+            cache_update_ms=cache_update_ms,
+            warm_start=warm,
+            ttft_ms=ttft_ms,
+            decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
+            decode_p99_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
+        )
+
+    def _alloc_paged(
+        self, m: int, exclude: Optional[str] = None
+    ) -> Optional[List[int]]:
+        """Allocate ``m`` pages, reclaiming page-budgeted LRU session
+        entries (never ``exclude`` — the entry being reused) on pressure."""
+        alloc = self.session_pool.allocator
+        pages = alloc.alloc(m)
+        if pages is None:
+            self.session_pool.reclaim(m, exclude=exclude)
+            pages = alloc.alloc(m)
+        return pages
+
+    def _generate_dense(
+        self,
+        input_ids: List[int],
+        max_new_tokens: int,
+        temperature: float,
+        cache_key: Optional[str],
+    ) -> GenerateResult:
+        """The dense-transient route: prefill into a ``max_len``-width B=1
+        cache, decode against it, store/trim into the pool afterwards (the
+        pool's put scatters it into pages when an allocator is bound)."""
+        n = len(input_ids)
         pool = self.session_pool if cache_key is not None else None
         t0 = time.perf_counter()
 
@@ -428,12 +677,16 @@ class InferenceEngine:
         # `sync_every` steps one transfer pulls the window and scans it for
         # stop tokens. Steps decoded past a stop are discarded.
         out: List[int] = []
+        gaps: List[float] = []
         tok = sample(logits, temperature=temperature)
+        jax.block_until_ready(tok)
+        ttft_ms = (time.perf_counter() - t0) * 1e3
         decode = self._decode()
         remaining = max_new_tokens
         stopped = False
         while remaining > 0 and not stopped:
             w = min(self.sync_every, remaining)
+            t_w = time.perf_counter()
             window = []
             for _ in range(w):
                 window.append(tok)
@@ -442,8 +695,10 @@ class InferenceEngine:
                 tok = sample(logits[:, 0], temperature=temperature)
             remaining -= w
             host = np.asarray(jnp.stack(window)[:, 0])   # single device sync
+            gap = (time.perf_counter() - t_w) * 1e3 / w
             for t in host:
                 out.append(int(t))
+                gaps.append(gap)
                 if int(t) in self.stop_tokens:
                     stopped = True
                     break
@@ -475,6 +730,9 @@ class InferenceEngine:
             inference_ms=inference_ms,
             cache_update_ms=cache_update_ms,
             warm_start=warm,
+            ttft_ms=ttft_ms,
+            decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
+            decode_p99_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
         )
 
     def generate(
@@ -627,4 +885,7 @@ class JaxLLMService:
             prefill_tokens=res.prefill_tokens,
             cache_update_ms=res.cache_update_ms,
             warm_start=res.warm_start,
+            ttft_ms=res.ttft_ms,
+            decode_p50_ms=res.decode_p50_ms,
+            decode_p99_ms=res.decode_p99_ms,
         )

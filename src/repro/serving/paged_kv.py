@@ -11,21 +11,23 @@ of physical page ids) sized to each sequence's actual token count.
 Layout invariant: a sequence's pages, concatenated in table order,
 reproduce the linear ``slot == absolute position`` layout of the full cache
 exactly. Compute paths therefore stay position-masked and unchanged —
-decode gathers the table into a transient linear view
-(:func:`repro.models.cache.gather_pages` /
-:func:`repro.models.transformer.decode_step_paged`), and prefill runs dense
-and writes through to pages afterwards — so the paged path is
-greedy-equivalent to the full-width path while resident KV between steps is
-``used_pages * page_bytes``, not ``n_lanes * max_len``.
+decode scatters and attends through the table
+(:func:`repro.models.transformer.decode_step_paged`, gather view via
+:func:`repro.models.cache.gather_pages`), and prefill lands *directly in
+pages*, chunk by chunk (:func:`repro.models.prefill.prefill_chunk_paged`;
+no dense ``max_len``-width intermediate exists on the paged paths) — so
+the paged path is greedy-equivalent to the full-width path while resident
+KV is ``used_pages * page_bytes``, not ``n_lanes * max_len``, during
+prefill as well as between steps.
 
 Ownership is reference-counted per page. Prefix reuse increfs the shared
 full pages of a pool entry instead of copying the lane (a partially-filled
-tail page is swapped for a fresh page the write-through fills, so an active
-lane's tail is always exclusively held), and finished-slot write-back
-*moves* the slot's pages into the pool entry — zero-copy in both
-directions. Page id 0 is reserved as a scratch page: table padding and
-inactive batch lanes point at it, and anything written there is garbage by
-design, masked via kv_pos.
+tail page is swapped for a fresh exclusively-held copy seeded by
+:meth:`PagedKVAllocator.copy_page`, so an active lane's tail is always
+private), and finished-slot write-back *moves* the slot's pages into the
+pool entry — zero-copy in both directions. Page id 0 is reserved as a
+scratch page: table padding and inactive batch lanes point at it, and
+anything written there is garbage by design, masked via kv_pos.
 
 Cross-session sharing (:class:`PrefixPageIndex`): beyond the session-key
 boundary, every *full* page at rest is indexed by a chained content hash of
@@ -34,10 +36,10 @@ share the resident pages of any other session's identical prefix — one
 system prompt, a million tenants, one physical copy. The index holds no
 references: a page's mapping is dropped the moment its refcount reaches
 zero (``decref``), so the index can never name a released page. Sharing is
-copy-on-write by construction — shared pages are never written (admission
-write-through skips them via ``n_skip``; divergence or a partial tail
-always lands in a fresh exclusively-held page), so a sharer can never
-observe another tenant's subsequent writes.
+copy-on-write by construction — shared pages are never written (the paged
+prefill scatter drops every write below ``n_skip`` pages; divergence or a
+partial tail always lands in a fresh exclusively-held page), so a sharer
+can never observe another tenant's subsequent writes.
 """
 
 from __future__ import annotations
@@ -166,6 +168,7 @@ class PagedKVAllocator:
         self._ref = np.zeros(n_pages, np.int32)
         self._gather_fns: Dict[int, object] = {}
         self._scatter_fns: Dict[int, object] = {}
+        self._copy_page_fn = None
 
     # -- accounting -----------------------------------------------------
     @property
@@ -313,6 +316,33 @@ class PagedKVAllocator:
 
             self._gather_fns[width] = fn
         return self._gather_fns[width]
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Device-copy one physical page's bytes (every layer of every
+        group) from ``src`` into ``dst`` — the partial-tail handoff of
+        chunked admission: a new lane continuing mid-page through a shared
+        entry's partially filled tail page gets an exclusively-held byte
+        copy to append into, instead of a dense gather + full-lane rewrite.
+        Bytes beyond the valid prefix come along too; they are dead cells
+        under the layout invariant (slot >= coverage is never causal) and
+        are overwritten as the lane grows. One compile total — src/dst are
+        traced scalars."""
+        if self._copy_page_fn is None:
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(pools, s, d):
+                return [
+                    {
+                        "k": pool["k"].at[:, d].set(pool["k"][:, s]),
+                        "v": pool["v"].at[:, d].set(pool["v"][:, s]),
+                    }
+                    for pool in pools
+                ]
+
+            self._copy_page_fn = fn
+        self.pools = self._copy_page_fn(
+            self.pools, jnp.int32(src), jnp.int32(dst)
+        )
 
     def write_through(
         self, pages: Sequence[int], dense: List[Dict], n_skip: int = 0

@@ -3,10 +3,24 @@ evaluation is single-client and names multi-tenant scalability as future
 work, §5).
 
 Slot-based continuous batching: a fixed decode batch of ``n_slots`` shares
-one batched KV cache. Incoming requests prefill into a free slot (B=1
-prefill, inserted at the slot index); every step() decodes all occupied
-slots in a single jitted call. Finished sequences free their slot for the
-next queued request — the standard vLLM-style loop, minus paging.
+one batched KV cache. Every step() decodes all decode-ready slots in a
+single jitted call. Finished sequences free their slot for the next queued
+request — the standard vLLM-style loop.
+
+Paged mode runs *unified steps* (docs/architecture.md, "Chunked paged
+prefill"): admission only plans — it reserves pages, shares resident
+prefix pages, and enqueues the un-covered prompt tokens as a chunk plan —
+and each step() first drains up to ``prefill_chunk_tokens`` prompt tokens
+from the plans (page-aligned B=1 chunks computed straight into the lane's
+pages by :class:`~repro.serving.chunked_prefill.PagedPrefiller`; no dense
+intermediate, no write-through), then decodes the decode-ready lanes. A
+long-context admission therefore costs resident tenants a bounded
+per-token latency bump per step instead of one monolithic prefill stall
+(``prefill_chunk_tokens=None`` restores the stall behavior — the
+benchmark baseline). Plans drain in strict FIFO admission order, which is
+what makes same-wave prefix sharing safe: a later admission may incref an
+earlier *active* slot's fully-covered prompt pages, because the donor's
+chunks always complete before the reader's first chunk runs.
 
 The scheduler can share a :class:`~repro.serving.session_cache.
 SessionCachePool` with the rest of the node (``session_pool``): a request
@@ -51,10 +65,15 @@ from ..models import (
 from ..models.cache import trim_cache_prefix
 from ..store.network import Network
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
+from .chunked_prefill import PagedPrefiller, prime_fill_pages
 from .engine import _bucket, chunked_append, prime_session_pool, truncate_for_cache
 from .paged_kv import SCRATCH_PAGE, PagedKVAllocator
 from .sampling import sample
-from .session_cache import CacheEntry, SessionCachePool
+from .session_cache import (
+    CacheEntry,
+    SessionCachePool,
+    longest_common_prefix,
+)
 
 
 @dataclass
@@ -71,6 +90,16 @@ class SlotState:
     warm_start: bool = False
     # peak number of occupied slots observed while this request decoded
     batch_size: int = 1
+    # chunked-prefill plan (paged mode): prompt tokens not yet in pages.
+    # The slot joins the decode batch only once the plan drains.
+    prefilled: bool = False
+    pending: List[int] = field(default_factory=list)
+    prefill_p0: int = 0      # absolute position of the next chunk
+    n_skip: int = 0          # leading read-only shared-prefix pages
+    # latency accounting (wall clock)
+    ttft_ms: float = 0.0
+    gaps_ms: List[float] = field(default_factory=list)
+    last_tok_t: Optional[float] = None
 
 
 @dataclass
@@ -85,6 +114,14 @@ class FinishedRequest:
     warm_start: bool = False
     # peak decode batch this request shared (1 = it ran alone)
     batch_size: int = 1
+    # wall-clock latency: submit -> first generated token determined, and
+    # the per-token decode gap distribution (time between consecutive
+    # generated tokens — inflated for residents while other tenants'
+    # prefill chunks share their steps, which is exactly the interference
+    # the chunk budget bounds)
+    ttft_ms: float = 0.0
+    decode_p50_ms: float = 0.0
+    decode_p99_ms: float = 0.0
 
 
 class BatchedServer:
@@ -100,6 +137,7 @@ class BatchedServer:
         page_size: int = 16,
         kv_pages: Optional[int] = None,
         share_prefixes: bool = True,
+        prefill_chunk_tokens: Optional[int] = 64,
     ) -> None:
         assert cfg.attn_variant == "full" and cfg.arch_type in ("dense", "moe", "vlm"), (
             "batched server currently supports full-cache attention archs"
@@ -109,6 +147,12 @@ class BatchedServer:
         self.stop_tokens = set(stop_tokens)
         self.session_pool = session_pool
         self.paged = paged
+        # per-step prompt-token budget for chunked prefill (paged mode):
+        # each step drains at most this many prompt tokens from the chunk
+        # plans before decoding, so a long admission can never stall the
+        # resident decoders for its whole prefill. None = unbounded (the
+        # full-prefill stall baseline).
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.slots: List[Optional[SlotState]] = [None] * n_slots
         self.queue: List = []
         self.finished: List[FinishedRequest] = []
@@ -148,6 +192,12 @@ class BatchedServer:
                 (n_slots, max_len // page_size), SCRATCH_PAGE, np.int32
             )
             self._kv_pos = jnp.full((n_slots, max_len), -1, jnp.int32)
+            # chunked-prefill machinery: one driver shared by all lanes, a
+            # strict-FIFO drain order over mid-prefill slots, and an iota
+            # row for setting a lane's kv_pos once its plan completes
+            self._prefiller = PagedPrefiller(cfg, params, self.allocator)
+            self._prefill_fifo: List[int] = []
+            self._iota = jnp.arange(max_len, dtype=jnp.int32)
 
             @partial(jax.jit, donate_argnums=(1, 3))
             def _decode_paged(params, pools, table, kv_pos, tokens, pos,
@@ -180,7 +230,10 @@ class BatchedServer:
         self._prefill_one = _prefill_one
         self._append_one = _append_one
         self._decode = _decode
-        self._pos = jnp.zeros((n_slots,), jnp.int32)
+        # host-side so mid-prefill lanes can be excluded from decode writes
+        # (their entry is pushed past the trimmed table per step) without a
+        # device round-trip per lane
+        self._pos = np.zeros((n_slots,), np.int32)
 
     # ------------------------------------------------------------------
     def submit(
@@ -259,8 +312,8 @@ class BatchedServer:
     ) -> bool:
         """Admit one queued request into free slot ``idx``. Returns False
         (paged mode only) when the page pool can't cover the request even
-        after reclaiming evictable session entries — the caller requeues and
-        retries once running slots release pages."""
+        after reclaiming evictable session entries — the caller keeps it
+        queued and retries once running slots release pages."""
         n = len(ids)
         # Loud capacity check for BOTH admission paths: submit() truncates
         # at the queue boundary, so tripping this means a caller bypassed
@@ -273,46 +326,49 @@ class BatchedServer:
             entry, usable = self.session_pool.match(cache_key, ids)
 
         if self.paged:
-            admitted = self._admit_paged(idx, ids, entry, usable, cache_key)
-            if admitted is None:
-                return False
-            logits, pos, usable, warm = admitted
-        else:
-            if entry is not None and usable > 0:
-                if entry.paged:
-                    # a full-width server sharing a pool whose entries are
-                    # paged (e.g. with a paged single-stream engine on the
-                    # same node): gather to a dense view, kv_pos masked to
-                    # `usable`
-                    base = self.session_pool.materialize(entry, usable, self.max_len)
-                else:
-                    base = entry.caches
-                    if usable < entry.pos:
-                        base = trim_cache_prefix(base, usable)
-                logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
+            # paged admission only PLANS (pages + chunk queue); no model
+            # compute runs here — step() drains the plan
+            return self._admit_paged(
+                idx, rid, ids, max_new, entry, usable, cache_key
+            )
+
+        if entry is not None and usable > 0:
+            if entry.paged:
+                # a full-width server sharing a pool whose entries are
+                # paged (e.g. with a paged single-stream engine on the
+                # same node): gather to a dense view, kv_pos masked to
+                # `usable`
+                base = self.session_pool.materialize(entry, usable, self.max_len)
             else:
-                usable = 0
-                logits, one_caches, pos = self._bucketed_prefill(ids)
+                base = entry.caches
+                if usable < entry.pos:
+                    base = trim_cache_prefix(base, usable)
+            logits, one_caches, pos = self._append_suffix(base, ids[usable:], usable)
+        else:
+            usable = 0
+            logits, one_caches, pos = self._bucketed_prefill(ids)
 
-            new_caches = []
-            for big, small in zip(self.caches, one_caches):
-                merged = {}
-                for k in big:
-                    if isinstance(big[k], dict):
-                        merged[k] = {kk: self._put_entry(big[k][kk], small[k][kk], idx, kk)
-                                     for kk in big[k]}
-                    else:
-                        merged[k] = self._put_entry(big[k], small[k], idx, k)
-                new_caches.append(merged)
-            self.caches = new_caches
-            warm = entry is not None and usable > 0 and entry.source == "prime"
+        new_caches = []
+        for big, small in zip(self.caches, one_caches):
+            merged = {}
+            for k in big:
+                if isinstance(big[k], dict):
+                    merged[k] = {kk: self._put_entry(big[k][kk], small[k][kk], idx, kk)
+                                 for kk in big[k]}
+                else:
+                    merged[k] = self._put_entry(big[k], small[k], idx, k)
+            new_caches.append(merged)
+        self.caches = new_caches
+        warm = entry is not None and usable > 0 and entry.source == "prime"
 
-        self._pos = self._pos.at[idx].set(int(pos[0]))
+        self._pos[idx] = int(pos[0])
         self._next_tok[idx] = int(jnp.argmax(logits[0]))
+        now = time.perf_counter()
         self.slots[idx] = SlotState(
             request_id=rid, pos=n, max_new=max_new,
             cache_key=cache_key, token_ids=list(ids), reused_tokens=usable,
-            warm_start=warm,
+            warm_start=warm, prefilled=True,
+            ttft_ms=(now - self._submit_times[rid]) * 1e3, last_tok_t=now,
         )
         return True
 
@@ -356,125 +412,200 @@ class BatchedServer:
         )
 
     def _admit_paged(
-        self, idx: int, ids: List[int], entry: Optional[CacheEntry],
-        usable: int, cache_key: Optional[str],
-    ):
-        """Paged slot admission: share the matched entry's full prefix pages
-        (incref, zero-copy), swap the partially filled tail page for a fresh
-        exclusively-held one,
-        allocate fresh pages for the suffix, run the (dense, transient)
-        suffix prefill, and write the lane through to the slot's pages.
-        Returns (logits, pos, usable, warm) or None when pages can't be
-        found.
+        self, idx: int, rid: int, ids: List[int], max_new: int,
+        entry: Optional[CacheEntry], usable: int, cache_key: Optional[str],
+    ) -> bool:
+        """Paged slot admission only PLANS: pick the best shared prefix,
+        incref its pages, allocate fresh pages out to ``n + 1`` positions
+        (the first decode token writes at pos ``n``, so admission itself
+        guarantees at least one generated token even if the pool is
+        exhausted afterwards), and enqueue the un-covered prompt tokens as
+        a chunk plan. No model compute runs here — :meth:`step` drains the
+        plan in page-aligned chunks straight into the lane's pages
+        (:class:`~repro.serving.chunked_prefill.PagedPrefiller`),
+        interleaved with resident decodes under ``prefill_chunk_tokens``.
 
-        Before the key path, the cross-session content-hash index is
-        consulted: when ANY resident session's pages cover more of this
-        request than the key's own entry, those pages are shared instead
-        (docs/architecture.md, "Cross-session shared-prefix paging"). The
-        cross run is full pages only, so it is page-aligned and needs no
-        tail swap; shared pages are never written (``n_skip`` redirects
-        their write-through slots to the scratch page) — copy-on-write by
-        construction.
+        Three share candidates, best coverage wins, earlier wins ties
+        (an entry hit keeps ``reused_tokens`` parity with the full-width
+        server; a wave match is the weakest claim — its donor is still
+        mid-flight):
+
+        - the key's own pool entry; its coverage may end mid-page, in
+          which case the donor's tail page is whole-page device-copied
+          into this lane's first fresh page (the copied prefix is causal
+          KV, the stale bytes beyond it are overwritten by the first
+          chunk);
+        - the cross-session content-hash index (docs/architecture.md,
+          "Cross-session shared-prefix paging") — full pages only;
+        - a same-wave active lane's prompt (:meth:`_same_wave_match`).
+
+        Shared pages are read-only by construction: ``n_skip`` makes the
+        chunk scatter drop any write landing in them — copy-on-write.
+        Coverage is capped at ``n - 1`` so the final chunk always computes
+        the request's first-token logits.
 
         A feasibility check runs first: if the fresh pages needed exceed
         free + genuinely reclaimable (refcount-1 entry pages, donor
         excluded), fail fast — before any incref, device page copy, or
-        reclaim — so a blocked head-of-line request neither destroys other
-        tenants' warm entries for nothing nor pays wasted page churn per
-        retry tick."""
+        reclaim — so a blocked request neither destroys other tenants'
+        warm entries for nothing nor pays wasted page churn per retry
+        tick."""
         alloc, pool = self.allocator, self.session_pool
         ps = alloc.page_size
         n = len(ids)
-        # capped at n-1 tokens so admission always computes last-token
-        # logits; the run beats the key path only if strictly longer
+        usable = min(usable, n - 1)
         cross = alloc.match_prefix(ids, n - 1)
-        if len(cross) * ps > usable:
-            entry, usable = None, len(cross) * ps
-        else:
-            cross = []
-        warm = entry is not None and usable > 0 and entry.source == "prime"
-        n_shared = alloc.pages_for(usable) if usable > 0 else 0
-        cow = 1 if (entry is not None and usable % ps) else 0
-        fresh_needed = cow + max(0, alloc.pages_for(n + 1) - n_shared)
+        wave = self._same_wave_match(ids)
+        kind, cover = ("entry", usable) if usable > 0 else ("none", 0)
+        if len(cross) * ps > cover:
+            kind, cover = "cross", len(cross) * ps
+        if len(wave) * ps > cover:
+            kind, cover = "wave", len(wave) * ps
+        warm = kind == "entry" and entry.source == "prime"
+
+        skip = cover // ps  # leading read-only full shared pages
+        tail_src: Optional[int] = None
+        if kind == "entry" and cover % ps:
+            tail_src = entry.pages[skip]
+        fresh_needed = alloc.pages_for(n + 1) - skip
         if fresh_needed > alloc.n_free + self._reclaimable_pages(cache_key):
-            return None
-        pages: List[int] = []
-        skip = 0  # leading shared pages the write-through must not touch
-        if cross:
+            return False
+        if kind == "entry":
+            shared = list(entry.pages[:skip])
+        elif kind == "cross":
+            shared = list(cross[:skip])
+        elif kind == "wave":
+            shared = list(wave[:skip])
+        else:
+            shared = []
+        if shared:
             # incref BEFORE any reclaim (_alloc_pages below): eviction of
             # the donor entry must not release pages we are about to share
-            alloc.incref(cross)
-            pages, skip = list(cross), len(cross)
-        elif entry is not None and usable > 0:
-            shared = list(entry.pages[: alloc.pages_for(usable)])
             alloc.incref(shared)
-            skip = len(shared)
-            if usable % ps:
-                # the tail page is partially filled: this slot will append
-                # into it, and the donor entry (or a concurrent admission
-                # for the same key) still references it — swap in a fresh
-                # page so an active lane's tail page is always exclusively
-                # held. No byte copy needed: write_through below rewrites
-                # the swapped page (tail-page prefix included) from the
-                # dense view gathered off the donor.
-                fresh = self._alloc_pages(1, exclude=cache_key)
-                if fresh is None:
-                    alloc.decref(shared)
-                    shared, usable, skip, warm = [], 0, 0, False
-                else:
-                    alloc.decref(shared[-1:])
-                    shared[-1] = fresh[0]
-                    skip = len(shared) - 1
-            pages = shared
-        else:
-            usable = 0
-        # cover n + 1 positions: the first decode token writes at pos n, so
-        # admission itself guarantees at least one generated token even if
-        # the pool is exhausted afterwards
-        more = alloc.pages_for(n + 1) - len(pages)
-        if more > 0:
-            fresh = self._alloc_pages(more, exclude=cache_key)
-            if fresh is None:
-                if pages:
-                    alloc.decref(pages)
-                return None
-            pages += fresh
+        fresh = self._alloc_pages(fresh_needed, exclude=cache_key)
+        if fresh is None:
+            if shared:
+                alloc.decref(shared)
+            return False
+        pages = shared + fresh
+        if tail_src is not None:
+            alloc.copy_page(tail_src, fresh[0])
+        if kind in ("cross", "wave") and pool is not None:
+            pool.shared_hits += 1
+            pool.shared_tokens += cover
 
-        if cross:
-            base = alloc.gather(cross, usable, self.max_len)
-            logits, dense, pos = self._append_suffix(base, ids[usable:], usable)
-            if pool is not None:
-                pool.shared_hits += 1
-                pool.shared_tokens += usable
-        elif usable > 0:
-            base = pool.materialize(entry, usable, self.max_len)
-            logits, dense, pos = self._append_suffix(base, ids[usable:], usable)
-        else:
-            logits, dense, pos = self._bucketed_prefill(ids)
-        alloc.write_through(pages, dense, n_skip=skip)
-        # index this slot's *full* prefix pages right away (not at
-        # write-back): later admissions in the same wave — 32 tenants with
-        # one system prompt arriving together — share them while the slot
-        # still decodes. Full pages of the admitted prefix are final (decode
-        # writes land at pos >= n, in the exclusively-held tail or beyond).
-        alloc.register_pages(ids, pages)
         self.slot_pages[idx] = pages
         self._table[idx, :] = alloc.table_for(pages, self.max_len)
-        self._kv_pos = self._kv_pos.at[idx].set(dense[0]["kv_pos"][0])
-        return logits, pos, usable, warm
+        self._pos[idx] = n
+        self.slots[idx] = SlotState(
+            request_id=rid, pos=n, max_new=max_new,
+            cache_key=cache_key, token_ids=list(ids), reused_tokens=cover,
+            warm_start=warm,
+            prefilled=False, pending=list(ids[cover:]), prefill_p0=cover,
+            n_skip=skip,
+        )
+        self._prefill_fifo.append(idx)
+        return True
+
+    def _same_wave_match(self, ids: List[int]) -> List[int]:
+        """Shared-prefix pages from an ACTIVE lane's prompt. The content
+        index only sees pages once a chunk completes (progressive
+        ``register_pages`` in :meth:`_drain_prefill`), so admissions
+        landing in the same step as their donor would miss it — match the
+        other slots' prompt tokens directly instead. Only the donor's full
+        prompt pages count, capped at ``n - 1`` reader tokens. Safe under
+        the strict FIFO plan drain: the donor admitted earlier, so its
+        chunks covering these pages complete before this reader's first
+        chunk runs, and the donor's decode writes land at ``pos >= lcp``
+        — never inside the shared region."""
+        if not self.allocator.share_prefixes:
+            return []
+        ps = self.allocator.page_size
+        best: List[int] = []
+        for j, st in enumerate(self.slots):
+            if st is None or not self.slot_pages[j]:
+                continue
+            lcp = longest_common_prefix(st.token_ids, ids)
+            full = min(lcp, len(ids) - 1) // ps
+            if full > len(best):
+                best = list(self.slot_pages[j][:full])
+        return best
+
+    def _drain_prefill(self) -> None:
+        """Drain up to ``prefill_chunk_tokens`` prompt tokens from the
+        chunk plans, strict FIFO admission order. Chunks end on page
+        boundaries (except a plan's final, possibly ragged, chunk) so
+        every completed chunk leaves fully-written pages, which are
+        content-indexed right away — later same-wave admissions share
+        them. A plan's last chunk yields the request's first decode token:
+        ttft stops there and the lane joins the decode batch this very
+        step."""
+        if not self._prefill_fifo:
+            return
+        alloc = self.allocator
+        ps = alloc.page_size
+        budget = self.prefill_chunk_tokens
+        if budget is not None:
+            budget = max(ps, budget)
+        spent = 0
+        while self._prefill_fifo:
+            if budget is not None and spent >= budget:
+                break
+            idx = self._prefill_fifo[0]
+            st = self.slots[idx]
+            assert st is not None and not st.prefilled, idx
+            left = len(st.pending)
+            cap = 256 if budget is None else min(256, budget - spent)
+            c = min(left, cap)
+            if c < left:
+                # end the chunk on a page boundary: completed pages are
+                # final and indexable, and the next chunk starts aligned
+                aligned = (st.prefill_p0 + c) // ps * ps - st.prefill_p0
+                if aligned > 0:
+                    c = aligned
+            chunk, st.pending = st.pending[:c], st.pending[c:]
+            logits = self._prefiller.run_chunk(
+                self.slot_pages[idx], chunk, st.prefill_p0, n_skip=st.n_skip
+            )
+            st.prefill_p0 += c
+            spent += c
+            # progressively index this lane's fully-covered prompt pages:
+            # 32 tenants with one system prompt arriving as a wave share
+            # them as soon as the first tenant's chunks write them
+            covered = min(st.prefill_p0, len(st.token_ids)) // ps
+            if covered > 0:
+                alloc.register_pages(
+                    st.token_ids[: covered * ps], self.slot_pages[idx][:covered]
+                )
+            if not st.pending:
+                self._prefill_fifo.pop(0)
+                st.prefilled = True
+                self._next_tok[idx] = int(jnp.argmax(logits))
+                now = time.perf_counter()
+                st.ttft_ms = (now - self._submit_times[st.request_id]) * 1e3
+                st.last_tok_t = now
+                # kv_pos becomes real only now: slot == position for the
+                # whole prompt, invalid beyond (layout invariant)
+                self._kv_pos = self._kv_pos.at[idx].set(
+                    jnp.where(self._iota < st.pos, self._iota, -1)
+                )
 
     def _shared_prefix_run(self, width: int) -> List[int]:
-        """Longest run of leading pages IDENTICAL across every active
-        lane's table, power-of-two bucketed (down) so the shared-pass
-        kernel compiles at most log2(MP) shapes, and capped below ``width``
-        so the per-lane suffix grid keeps >= 1 page. Identical page ids
-        across >= 2 lanes means refcount >= 2, hence inside every holder's
-        read-only shared region (a lane's writable tail page is exclusively
-        held by construction) — so the run is stable for the whole step and
-        holds positions [0, run*page_size) for every lane."""
+        """Longest run of leading pages IDENTICAL across every
+        decode-ready lane's table, power-of-two bucketed (down) so the
+        shared-pass kernel compiles at most log2(MP) shapes, and capped
+        below ``width`` so the per-lane suffix grid keeps >= 1 page.
+        Identical page ids across >= 2 lanes means refcount >= 2, hence
+        inside every holder's read-only shared region (a lane's writable
+        tail page is exclusively held by construction) — so the run is
+        stable for the whole step and holds positions [0, run*page_size)
+        for every lane. Mid-prefill lanes are excluded: they don't attend
+        this step (their batched-decode output is garbage-unread), so
+        they must not shorten the residents' shared run."""
         active = [
             self.slot_pages[i]
-            for i, s in enumerate(self.slots) if s is not None
+            for i, s in enumerate(self.slots)
+            if s is not None and s.prefilled
         ]
         if len(active) < 2:
             return []
@@ -556,6 +687,7 @@ class BatchedServer:
             # inactive lanes keep decoding into the scratch page until the
             # slot is re-admitted; their kv_pos row is junk but unread
             self._table[idx, :] = SCRATCH_PAGE
+        gaps = st.gaps_ms
         self.finished.append(
             FinishedRequest(
                 st.request_id,
@@ -566,39 +698,76 @@ class BatchedServer:
                 reused_tokens=st.reused_tokens,
                 warm_start=st.warm_start,
                 batch_size=st.batch_size,
+                ttft_ms=st.ttft_ms,
+                decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
+                decode_p99_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
             )
         )
         self.slots[idx] = None
 
+    def _admit_from_queue(self) -> None:
+        """FIFO-fair admission: walk the WHOLE queue in order, admitting
+        each feasible request into a free slot and *skipping* (not
+        blocking on) requests the page pool can't cover yet — a huge
+        head-of-line request waits for pages without starving smaller
+        tenants queued behind it, and it keeps its queue position, so it
+        still admits first once pages free up (no permanent starvation:
+        nothing jumps ahead of it in the queue itself)."""
+        free = [i for i in range(self.n_slots) if self.slots[i] is None]
+        if not free or not self.queue:
+            return
+        admitted_any = False
+        remaining: List = []
+        for item in self.queue:
+            if not free:
+                remaining.append(item)
+                continue
+            rid, ids, max_new, cache_key = item
+            if self._insert_slot(free[0], rid, ids, max_new, cache_key):
+                free.pop(0)
+                admitted_any = True
+            else:
+                remaining.append(item)
+        self.queue = remaining
+        if admitted_any or not self.queue:
+            return
+        if any(s is not None for s in self.slots):
+            return  # out of pages: retry once running slots release them
+        # nothing active, nothing admitted — last resort before declaring
+        # the pool too small: the only reclaimable pages may belong to the
+        # head request's own session entry (excluded from reclaim as the
+        # reuse donor) — evict it and admit cold rather than killing the
+        # node service
+        rid, ids, max_new, cache_key = self.queue[0]
+        if (
+            self.session_pool is not None and cache_key is not None
+            and cache_key in self.session_pool
+        ):
+            self.session_pool.invalidate(cache_key)
+            if self._insert_slot(free[0], rid, ids, max_new, cache_key):
+                self.queue.pop(0)
+                return
+        raise RuntimeError(
+            f"paged KV pool too small: request of {len(ids)} tokens "
+            f"cannot be admitted with {self.allocator.n_free} free "
+            f"pages of {self.allocator.page_size} and nothing left "
+            "to evict — raise kv_pages or lower max_len"
+        )
+
     def step(self) -> None:
-        """One scheduler tick: admit queued work into free slots, then decode
-        every occupied slot in a single batched call."""
-        for idx in range(self.n_slots):
-            if self.slots[idx] is None and self.queue:
-                rid, ids, max_new, cache_key = self.queue[0]
-                if self._insert_slot(idx, rid, ids, max_new, cache_key):
-                    self.queue.pop(0)
-                    continue
-                if any(s is not None for s in self.slots):
-                    break  # out of pages: retry once running slots finish
-                # last resort before declaring the pool too small: the only
-                # reclaimable pages may belong to this very session's entry
-                # (excluded from reclaim as the reuse donor) — evict it and
-                # admit cold rather than killing the node service
-                if (
-                    self.session_pool is not None and cache_key is not None
-                    and cache_key in self.session_pool
-                ):
-                    self.session_pool.invalidate(cache_key)
-                    if self._insert_slot(idx, rid, ids, max_new, cache_key):
-                        self.queue.pop(0)
-                        continue
-                raise RuntimeError(
-                    f"paged KV pool too small: request of {len(ids)} tokens "
-                    f"cannot be admitted with {self.allocator.n_free} free "
-                    f"pages of {self.allocator.page_size} and nothing left "
-                    "to evict — raise kv_pages or lower max_len"
-                )
+        """One unified scheduler tick. Paged mode: admit queued requests
+        FIFO-fairly, drain up to ``prefill_chunk_tokens`` prompt tokens
+        from the chunk plans (straight into pages), then decode the
+        decode-ready lanes in one batched call — prefill chunks and decode
+        share every step, so a long admission costs residents a bounded
+        latency bump per step instead of a monolithic stall. Full-width
+        mode keeps the classic loop: admission prefills in one shot and
+        every occupied slot decodes."""
+        self._admit_from_queue()
+        if self.paged:
+            # drain BEFORE counting decoders: a plan completing within this
+            # step's budget decodes its first token this very step
+            self._drain_prefill()
         n_active = sum(s is not None for s in self.slots)
         if n_active == 0:
             return
@@ -607,13 +776,14 @@ class BatchedServer:
                 st.batch_size = max(st.batch_size, n_active)
 
         if self.paged:
-            # grow-on-demand: each active slot needs a page covering the
-            # position it is about to write; a slot that cannot get one
+            # grow-on-demand: each decode-ready slot needs a page covering
+            # the position it is about to write; a slot that cannot get one
             # (pool exhausted, nothing evictable) retires cleanly with the
-            # tokens it has — never a silent mode="drop" KV loss
+            # tokens it has — never a silent mode="drop" KV loss.
+            # Mid-prefill lanes reserved their whole span at admission.
             ps = self.allocator.page_size
             for idx, st in enumerate(self.slots):
-                if st is None:
+                if st is None or not st.prefilled:
                     continue
                 if st.pos >= len(self.slot_pages[idx]) * ps:
                     fresh = self._alloc_pages(1, exclude=st.cache_key)
@@ -622,30 +792,40 @@ class BatchedServer:
                         continue
                     self.slot_pages[idx].append(fresh[0])
                     self._table[idx, len(self.slot_pages[idx]) - 1] = fresh[0]
-            if not any(s is not None for s in self.slots):
-                return
+            ready = [
+                i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilled
+            ]
+            if not ready:
+                return  # every occupied lane is mid-prefill
             tokens = jnp.asarray(self._next_tok)[:, None]
             # page-width bucketing: run the jitted decode at the smallest
-            # power-of-two page width covering the longest *active* lane,
-            # not at max_len — the kernel's grid (pallas) or the gathered
-            # view (reference) then scales with what sessions actually
-            # hold. The layout invariant (slot == position) makes the
-            # trimmed attention identical: every active lane's tokens live
-            # in its own pages, all inside the trimmed width. At most
+            # power-of-two page width covering the longest *decode-ready*
+            # lane, not at max_len — the kernel's grid (pallas) or the
+            # gathered view (reference) then scales with what sessions
+            # actually hold. The layout invariant (slot == position) makes
+            # the trimmed attention identical: every ready lane's tokens
+            # live in its own pages, all inside the trimmed width. At most
             # log2(MP) decode shapes compile.
             mp = self._table.shape[1]
-            need = max(
-                (len(self.slot_pages[i]) for i, s in enumerate(self.slots)
-                 if s is not None),
-                default=1,
-            )
+            need = max(len(self.slot_pages[i]) for i in ready)
             w = 1
             while w < max(1, need):
                 w *= 2
             w = min(w, mp)
+            wp = w * ps
+            # mid-prefill lanes ride the batched call but touch nothing:
+            # their decode position is pushed past the trimmed table, so
+            # the KV scatter and the kv_pos relabel both drop
+            # (models/cache.py OOB sentinel), and their logits lane is
+            # never read below
+            dec_pos = self._pos.copy()
+            for i, s in enumerate(self.slots):
+                if s is None or not s.prefilled:
+                    dec_pos[i] = wp
             # cross-session shared-prefix split (pallas only — the
             # reference path's gathered view has no per-page DMA to save):
-            # pages every active lane starts with are attended once per
+            # pages every ready lane starts with are attended once per
             # unique page for the whole batch instead of once per lane
             sp = None
             if self.cfg.attn_impl == "pallas":
@@ -653,31 +833,39 @@ class BatchedServer:
                 if run:
                     sp = jnp.asarray(np.asarray(run, np.int32))
             if w < mp:
-                wp = w * ps
                 logits, pools, kvp = self._decode_paged(
                     self.params, self.allocator.pools,
                     jnp.asarray(self._table[:, :w]),
-                    self._kv_pos[:, :wp], tokens, self._pos, sp,
+                    self._kv_pos[:, :wp], tokens, jnp.asarray(dec_pos), sp,
                 )
                 self._kv_pos = self._kv_pos.at[:, :wp].set(kvp)
             else:
                 logits, pools, self._kv_pos = self._decode_paged(
                     self.params, self.allocator.pools, jnp.asarray(self._table),
-                    self._kv_pos, tokens, self._pos, sp,
+                    self._kv_pos, tokens, jnp.asarray(dec_pos), sp,
                 )
             self.allocator.pools = pools
         else:
             tokens = jnp.asarray(self._next_tok)[:, None]
-            logits, self.caches = self._decode(self.params, self.caches, tokens, self._pos)
-        self._pos = self._pos + 1
+            logits, self.caches = self._decode(
+                self.params, self.caches, tokens, jnp.asarray(self._pos)
+            )
         nxt = np.asarray(sample(logits[:, 0]))
+        now = time.perf_counter()
 
         for idx, st in enumerate(self.slots):
-            if st is None:
+            if st is None or not st.prefilled:
                 continue
             tok = int(self._next_tok[idx])
             st.generated.append(tok)
             st.pos += 1
+            self._pos[idx] += 1
+            # per-token decode gap: inflated for residents while other
+            # tenants' prefill chunks share their steps — exactly the
+            # interference the chunk budget bounds
+            if st.last_tok_t is not None:
+                st.gaps_ms.append((now - st.last_tok_t) * 1e3)
+            st.last_tok_t = now
             if (
                 tok in self.stop_tokens
                 or len(st.generated) >= st.max_new
@@ -702,6 +890,7 @@ class BatchedServer:
                 self.slot_pages[idx] = []
         if self.paged:
             self._table[:, :] = SCRATCH_PAGE
+            self._prefill_fifo.clear()
         if self.session_pool is not None:
             self.session_pool.clear()
         self.finished.clear()
@@ -720,15 +909,25 @@ class BatchedServer:
         :meth:`repro.serving.engine.InferenceEngine.prime`, called off the
         serving hot path when a replicated tokenized context lands on this
         node. A later ``submit(..., cache_key=...)`` for the session then
-        admits with a suffix-only chunk prefill. Guard/extension/provenance
+        admits with a suffix-only chunk plan. Guard/extension/provenance
         semantics live in :func:`repro.serving.engine.prime_session_pool`
-        (shared with the single-stream engine)."""
+        (shared with the single-stream engine); in paged mode the KV is
+        chunk-prefilled straight into fresh pages (``_prime_paged_fill``)
+        instead of through a dense lane."""
         warm, _ = prime_session_pool(
             self.session_pool, cache_key, list(token_ids),
             self.max_len, self.max_len - 2,
             self._append_suffix, self._bucketed_prefill,
+            paged_fill=self._prime_paged_fill if self.paged else None,
         )
         return warm
+
+    def _prime_paged_fill(
+        self, token_ids: List[int], entry: Optional[CacheEntry], usable: int
+    ) -> Optional[List[int]]:
+        return prime_fill_pages(
+            self.session_pool, self._prefiller, token_ids, entry, usable
+        )
 
 
 @dataclass
@@ -796,6 +995,7 @@ class BatchedLLMService:
         page_size: int = 16,
         kv_pages: Optional[int] = None,
         share_prefixes: bool = True,
+        prefill_chunk_tokens: Optional[int] = 64,
     ) -> "BatchedLLMService":
         params = init_params(jax.random.key(seed), cfg)
         pool = (
@@ -807,6 +1007,7 @@ class BatchedLLMService:
             cfg, params, n_slots=n_slots, max_len=max_len, session_pool=pool,
             paged=paged and supports_append(cfg), page_size=page_size,
             kv_pages=kv_pages, share_prefixes=share_prefixes,
+            prefill_chunk_tokens=prefill_chunk_tokens,
         )
         tok = get_tokenizer(cfg.vocab_size, seed=tokenizer_seed, name=model)
         return cls(model=model, server=server, tokenizer=tok)
@@ -978,4 +1179,7 @@ class BatchedLLMService:
             warm_start=f.warm_start,
             queue_ms=queue_ms,
             batch_size=f.batch_size,
+            ttft_ms=f.ttft_ms,
+            decode_p50_ms=f.decode_p50_ms,
+            decode_p99_ms=f.decode_p99_ms,
         )
