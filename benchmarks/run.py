@@ -17,6 +17,7 @@ def main() -> None:
     from .concurrency_bench import concurrency_bench
     from .fleet_bench import fleet_bench
     from .kernel_bench import kernel_microbench
+    from .kv_ship_bench import kv_ship_bench
     from .migration_bench import migration_bench
     from .paged_attn_bench import paged_attn_bench
     from .paged_kv_bench import paged_kv_bench
@@ -37,6 +38,7 @@ def main() -> None:
         kernel_microbench, roofline_table, session_kv_bench, migration_bench,
         concurrency_bench, paged_kv_bench, paged_attn_bench, churn_bench,
         shared_prefix_bench, fleet_bench, chunked_prefill_bench,
+        kv_ship_bench,
     ]
     for bench in benches:
         tag = bench.__name__

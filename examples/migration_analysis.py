@@ -1,15 +1,63 @@
 """Beyond-paper analysis: migrate internal model state across pods vs
 re-prefill the token context at the new pod (paper §5's open question).
 
+When BENCH_kv_ship.json is present (produced by ``python -m
+benchmarks.kv_ship_bench``), also prints the *measured* ship-vs-recompute
+crossover from the live shipping fabric — the analytic table above, run
+for real over the simulated network with digest-verified page streams.
+
     PYTHONPATH=src python examples/migration_analysis.py [--context 32768]
 """
 
 import argparse
+import json
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import ASSIGNED
 from repro.core.mesh_context import migration_vs_reprefill
+
+BENCH_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_kv_ship.json"
+)
+
+
+def print_measured_crossover() -> None:
+    if not os.path.exists(BENCH_PATH):
+        print(
+            "\n(no BENCH_kv_ship.json — run `python -m benchmarks."
+            "kv_ship_bench` for the measured crossover)"
+        )
+        return
+    with open(BENCH_PATH) as f:
+        bench = json.load(f)
+    print(
+        "\nMeasured crossover (BENCH_kv_ship.json: forced ship runs over "
+        "the simulated network vs the receiver's prefill constant):"
+    )
+    print(
+        f"{'tokens':>7} {'ms/tok':>7} {'link':>14} "
+        f"{'ship_ms':>9} {'recompute_ms':>12} {'winner':>10} {'model':>10}"
+    )
+    for c in bench["crossover_cells"]:
+        link = (
+            f"{c['link']['bandwidth_mbps']:.0f}Mbps/"
+            f"{c['link']['latency_ms']:.0f}ms"
+        )
+        ship = (
+            f"{c['measured_ship_ms']:.1f}"
+            if c["measured_ship_ms"] is not None else "-"
+        )
+        flag = "ok" if c["model_correct"] else "WRONG"
+        print(
+            f"{c['n_tokens']:>7} {c['prefill_ms_per_token']:>7.1f} "
+            f"{link:>14} {ship:>9} {c['measured_recompute_ms']:>12.1f} "
+            f"{c['measured_winner']:>10} {c['model_decision']:>7}={flag}"
+        )
+    print(
+        f"cost-model accuracy: {bench['model_accuracy']:.0%} over "
+        f"{len(bench['crossover_cells'])} cells"
+    )
 
 
 def main() -> None:
@@ -25,6 +73,7 @@ def main() -> None:
         "DisCEdge-style state handover; dense archs trade linear KV bytes "
         "against linear re-prefill FLOPs."
     )
+    print_measured_crossover()
 
 
 if __name__ == "__main__":

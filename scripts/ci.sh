@@ -41,6 +41,9 @@ python -m benchmarks.fleet_bench --smoke
 echo "== smoke: chunked paged prefill (budget-independent outputs, latency fields) =="
 python -m benchmarks.chunked_prefill_bench --smoke
 
+echo "== smoke: KV-page shipping (measured crossover + faulted run, echo only) =="
+python -m benchmarks.kv_ship_bench --smoke
+
 echo "== smoke: examples/quickstart.py (full stack, asserts suffix-only roams) =="
 python examples/quickstart.py > /dev/null
 

@@ -145,8 +145,11 @@ class ServiceResult:
     cache_update_ms: float = 0.0
     # True when the reused KV prefix was installed by the migration
     # warm-start hook (replication arrival primed the pool) rather than by a
-    # turn served on this node — see docs/architecture.md.
+    # turn served on this node — see docs/architecture.md. ``warm_source``
+    # says *how*: "tokens" (PR-2 recompute prime), "pages" (digest-verified
+    # KV-page ship install), "none" otherwise.
     warm_start: bool = False
+    warm_source: str = "none"
     # Multi-tenant accounting (submit path): sim time spent queued for a
     # free stream/slot, and the peak decode batch this request shared.
     queue_ms: float = 0.0
@@ -440,6 +443,7 @@ class ContextManager:
         timing.kv_reused_tokens = result.reused_tokens
         timing.prefill_tokens = result.prefill_tokens
         timing.kv_warm_start = result.warm_start
+        timing.kv_warm_source = result.warm_source
         timing.ttft_ms = result.ttft_ms
         timing.decode_p50_ms = result.decode_p50_ms
         timing.decode_p99_ms = result.decode_p99_ms

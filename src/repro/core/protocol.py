@@ -77,6 +77,12 @@ class Timing:
     # prime), not by a turn previously served on this node.
     migrated: bool = False
     kv_warm_start: bool = False
+    # *How* the warm start happened (KV-page shipping, docs/architecture.md
+    # "KV page shipping"): "tokens" — the prime re-prefilled the replicated
+    # token ids (PR-2 recompute); "pages" — the KV pages themselves were
+    # shipped from the origin node and installed digest-verified; "none" —
+    # no warm start (cold, or the node's own serve entry).
+    kv_warm_source: str = "none"
     # Multi-tenant serving (submit/await path): time the request sat in the
     # LLM Service's queue waiting for a free stream/slot, and the peak decode
     # batch size this request shared the engine with (1 = single-stream).

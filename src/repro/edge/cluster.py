@@ -36,6 +36,9 @@ class EdgeCluster:
     # LLMClient consults it for placement; mount via build(router=...) or
     # repro.fleet.mount_router on a built cluster.
     router: Optional[object] = None
+    # KV-page shipping fabric (docs/architecture.md, "KV page shipping"),
+    # mounted by build(kv_ship=True); None = replication always recomputes.
+    kv_ship: Optional[object] = None
 
     @classmethod
     def build(
@@ -51,6 +54,9 @@ class EdgeCluster:
         warm_start: str = "eager",
         router: Optional[object] = None,
         admission_limit: Optional[int] = None,
+        kv_ship: bool = False,
+        kv_ship_force: Optional[str] = None,
+        kv_ship_chunk_pages: int = 4,
     ) -> "EdgeCluster":
         """Build a cluster where every node serves the same model — one
         keygroup per model, membership = nodes serving it (paper §3.3).
@@ -63,7 +69,15 @@ class EdgeCluster:
         :class:`~repro.fleet.router.RoutingPolicy` instance;
         ``admission_limit`` gives every node an
         :class:`~repro.fleet.admission.AdmissionControl` with that
-        concurrency target."""
+        concurrency target.
+
+        ``kv_ship=True`` mounts a :class:`~repro.store.kv_ship.KVShipper`
+        and registers every node whose service exposes the shipping hooks
+        (``kv_ship_profile`` returning non-None): replication arrivals
+        then choose between shipping the origin's KV pages and token
+        recompute via the measured cost model (``kv_ship_force`` pins one
+        path for benches). Off by default — the PR-2 recompute-only
+        behaviour."""
         net = Network(default_link=inter_node_link or Link(latency_ms=1.0, bandwidth_mbps=1000.0))
         if client_link is not None:
             for nid in node_ids:
@@ -108,6 +122,27 @@ class EdgeCluster:
             cluster.nodes[nid] = EdgeNode.create(
                 nid, store, services[nid], retry=retry, warm_start=warm_start
             )
+        if kv_ship:
+            from ..store.kv_ship import KVShipper  # lazy import, jax-free
+            shipper = KVShipper(
+                net, store, chunk_pages=kv_ship_chunk_pages,
+                force=kv_ship_force,
+            )
+            for nid, node in cluster.nodes.items():
+                svc = services[nid]
+                profile_fn = getattr(svc, "kv_ship_profile", None)
+                if profile_fn is None or profile_fn() is None:
+                    continue  # this node can't ship — recompute-only
+                node.kv_ship = shipper
+                shipper.register_node(
+                    nid, svc.model,
+                    profile=profile_fn,
+                    exporter=svc.export_kv_pages,
+                    installer=node._ship_install,
+                    fallback=node._ship_fallback,
+                    coverage=svc.resident_ship_pages,
+                )
+            cluster.kv_ship = shipper
         if admission_limit is not None:
             from ..fleet.admission import AdmissionControl  # lazy: no cycle
             for node in cluster.nodes.values():
@@ -128,6 +163,19 @@ class EdgeCluster:
     def warm_starts(self) -> int:
         """Total pool primes performed on replication arrival, all nodes."""
         return sum(n.warm_starts for n in self.nodes.values())
+
+    def kv_ship_stats(self) -> Dict[str, int]:
+        """Cluster-wide KV-page shipping counters: the shipper's protocol
+        stats plus the per-node install/fallback tallies (empty when
+        shipping isn't mounted)."""
+        if self.kv_ship is None:
+            return {}
+        stats = dict(self.kv_ship.stats())
+        stats["node_ships"] = sum(n.kv_ships for n in self.nodes.values())
+        stats["node_fallbacks"] = sum(
+            n.kv_ship_fallbacks for n in self.nodes.values()
+        )
+        return stats
 
     def client_bytes_up(self) -> int:
         return self.network.bytes_for_tag(CLIENT_UP_TAG)
@@ -168,6 +216,11 @@ class EdgeCluster:
         failed = self.nodes[node_id].crash()
         if lose_replica:
             self.store.drop_replica_data(node_id)
+        if self.kv_ship is not None:
+            # sender-side ship streams held exported page bytes in the
+            # crashed process — gone; receivers re-request on restart.
+            # The inbox (receiver) side is durable like the replica.
+            self.kv_ship.crash(node_id)
         return failed
 
     def restart(self, node_id: str) -> None:
@@ -177,9 +230,20 @@ class EdgeCluster:
         missed; its own parked outbox writes ship out too) — arriving
         contexts re-prime through the normal warm-start hook."""
         self.network.set_node_down(node_id, False)
+        if self.kv_ship is not None:
+            # anti-entropy parity for shipped KV: drop inbox streams whose
+            # replica ground truth diverged while the node was down — a
+            # rejoining node never installs pages its replica can't vouch
+            # for. Must run BEFORE the restart replay re-decides primes.
+            self.kv_ship.reconcile(node_id)
         self.nodes[node_id].restart()
         self.store.anti_entropy(node_id)
         self.store.kick_outbox(node_id)
+        if self.kv_ship is not None:
+            # release parked sender streams and re-request orphaned inbox
+            # streams — resume-from-watermark, only unconfirmed chunks
+            # re-ship
+            self.kv_ship.kick(node_id)
         # a rejoining node must re-announce itself to the fleet router —
         # its heartbeat chain died with it
         bus = getattr(self.router, "bus", None)

@@ -76,6 +76,12 @@ class EdgeNode:
     # smoothed generation throughput published in load reports.
     admission: Optional["AdmissionControl"] = None
     ewma_tps: float = 0.0
+    # KV-page shipping (docs/architecture.md, "KV page shipping"): the
+    # cluster's KVShipper when this node participates (None: every
+    # replication arrival primes by token recompute — the PR-2 behaviour).
+    kv_ship: Optional[object] = None
+    kv_ships: int = 0            # shipped-page installs completed here
+    kv_ship_fallbacks: int = 0   # failed ships that recomputed instead
 
     @classmethod
     def create(
@@ -210,13 +216,65 @@ class EdgeNode:
         """Replication arrival → pre-warm the session KV pool. Only
         tokenized contexts for this node's own model prime anything; raw
         text has no token ids to prefill (the paper's raw baseline gets no
-        warm start — one more cost of storing text)."""
+        warm start — one more cost of storing text).
+
+        With a mounted :class:`~repro.store.kv_ship.KVShipper`, this is
+        also the ship-vs-recompute decision point (docs/architecture.md,
+        "KV page shipping"): when the write originated on a *different*
+        node and the measured cost model says shipping that node's KV pages
+        beats re-prefilling the tokens here, the shipper takes ownership of
+        the prime — it ends in :meth:`_ship_install` or a visible
+        :meth:`_ship_fallback`, never silently."""
         if keygroup != self.service.model:
             return
         ids = getattr(vv.value, "ids", None)
         if not ids:
             return
+        origin = getattr(vv, "origin", "")
+        if (
+            self.kv_ship is not None
+            and self.alive
+            and origin
+            and origin != self.node_id
+            and self.kv_ship.maybe_ship(
+                keygroup, key, origin, self.node_id, list(ids)
+            )
+        ):
+            return  # the shipper owns this prime now
+        self._prime_tokens(key, ids)
+
+    def _prime_tokens(self, key: str, ids) -> None:
+        """The PR-2 token-recompute prime (also the shipper's fallback)."""
         t0 = perf_counter()
         if self.service.prime(key, list(ids)):
             self.warm_starts += 1
             self.warm_start_ms += (perf_counter() - t0) * 1e3
+
+    # -- KVShipper hooks ---------------------------------------------------
+    def _ship_install(
+        self, key: str, token_ids, payloads, have_pages: int
+    ) -> bool:
+        """Installer hook: digest-verified pages arrive — put them in the
+        session pool. False (node down, or the service can't take pages)
+        sends the shipper to the fallback path."""
+        if not self.alive:
+            return False
+        install = getattr(self.service, "install_kv_pages", None)
+        if install is None:
+            return False
+        t0 = perf_counter()
+        ok = bool(install(key, list(token_ids), payloads, have_pages))
+        if ok:
+            self.kv_ships += 1
+            self.warm_starts += 1
+            self.warm_start_ms += (perf_counter() - t0) * 1e3
+        return ok
+
+    def _ship_fallback(self, key: str, token_ids, reason: str) -> None:
+        """Fallback hook: the ship failed (NACK, retries exhausted, stale
+        at apply, install refused) — degrade gracefully to the token
+        recompute prime, visibly counted."""
+        if not self.alive:
+            return
+        self.kv_ship_fallbacks += 1
+        self._prime_tokens(key, token_ids)

@@ -32,8 +32,13 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from ..core.manager import ServiceCapabilities, ServiceResult
+from ..store.kv_ship import NodeShipProfile, PageShipment, page_digests
 from ..store.network import Network
 from ..tokenizer import ByteLevelBPE, IM_END, get_tokenizer
+
+# warm-start provenance of a virtual KV prefix, mirroring
+# repro.serving.session_cache.WARM_SOURCES (not imported: jax-free)
+_WARM_SOURCES = {"prime": "tokens", "ship": "pages"}
 
 
 def _lcp(a: List[int], b: List[int]) -> int:
@@ -87,6 +92,12 @@ class EchoLLMService:
     n_generate: int = 24
     kv_reuse: bool = False
     n_slots: int = 1
+    # KV-page shipping (repro.store.kv_ship): virtual bytes of KV one token
+    # occupies on the wire (0 disables shipping for this node) and the page
+    # granularity of the virtual page pool. kv_bytes_per_token * ship_page_
+    # size is the per-page wire size the cost model bills.
+    kv_bytes_per_token: float = 0.0
+    ship_page_size: int = 16
     # Bounded virtual session pool (None: unbounded — the pre-fleet
     # behaviour). At fleet scale the KV pool is the scarce resource: an
     # LRU bound makes placement matter — a node serving too many sessions
@@ -161,6 +172,85 @@ class EchoLLMService:
         self._evict_over_capacity()
         return True
 
+    # -- KV-page shipping hooks (repro.store.kv_ship) -------------------
+    def kv_ship_profile(self) -> Optional[NodeShipProfile]:
+        """This node's shipping constants for the cost model; None when it
+        can't ship (reuse off or no per-token KV size configured)."""
+        if not self.kv_reuse or self.kv_bytes_per_token <= 0:
+            return None
+        return NodeShipProfile(
+            page_size=self.ship_page_size,
+            page_wire_bytes=int(self.kv_bytes_per_token * self.ship_page_size),
+            prefill_ms_per_token=self.prefill_ms_per_token,
+        )
+
+    def _page_payload(self, digest: bytes) -> bytes:
+        """Deterministic pseudo-bytes standing in for one serialized KV
+        page: derived from the page's chained content digest, so two nodes
+        holding the same token prefix export byte-identical payloads (the
+        analytic twin of the engine's bit-exact native-dtype export)."""
+        n = max(1, int(self.kv_bytes_per_token * self.ship_page_size))
+        reps = -(-n // len(digest))
+        return (digest * reps)[:n]
+
+    def export_kv_pages(self, cache_key: str) -> Optional[PageShipment]:
+        """Serialize the resident full pages of ``cache_key``'s virtual KV
+        prefix, or None when the key isn't resident."""
+        prev = self._kv_prefix.get(cache_key)
+        if prev is None or self.kv_bytes_per_token <= 0:
+            return None
+        digs = page_digests(prev, self.ship_page_size)
+        if not digs:
+            return None
+        return PageShipment(
+            token_ids=list(prev),
+            payloads=[self._page_payload(d) for d in digs],
+        )
+
+    def install_kv_pages(
+        self,
+        cache_key: str,
+        token_ids: List[int],
+        payloads: List[bytes],
+        have_pages: int,
+    ) -> bool:
+        """Install digest-verified shipped pages as this node's virtual KV
+        prefix for ``cache_key``. Each payload is re-checked against the
+        page content it claims to hold (the analytic twin of the engine
+        importing page bytes); any mismatch refuses the install and the
+        shipper falls back to token recompute. Install semantics mirror
+        ``prime``: delta-extension keeps provenance, a fresh install parks
+        at the LRU end with source ``"ship"``."""
+        if not self.kv_reuse or self.kv_bytes_per_token <= 0:
+            return False
+        ids = list(token_ids)
+        digs = page_digests(ids, self.ship_page_size)
+        want = min(len(digs), have_pages + len(payloads))
+        for i in range(have_pages, want):
+            if payloads[i - have_pages] != self._page_payload(digs[i]):
+                return False
+        prev = self._kv_prefix.get(cache_key)
+        if prev is not None:
+            lcp = _lcp(prev, ids)
+            if lcp == len(ids) and len(prev) >= len(ids):
+                return True   # already covered: no-op
+            if lcp == len(prev):
+                self._kv_prefix[cache_key] = ids   # delta-extend, keep source
+                return True
+        self._kv_prefix[cache_key] = ids
+        self._kv_prefix.move_to_end(cache_key, last=False)
+        self._kv_source[cache_key] = "ship"
+        self._evict_over_capacity()
+        return True
+
+    def resident_ship_pages(self, cache_key: str, token_ids: List[int]) -> int:
+        """Full prefix pages of ``token_ids`` this node already holds for
+        ``cache_key`` — shipped deltas skip them."""
+        prev = self._kv_prefix.get(cache_key)
+        if prev is None:
+            return 0
+        return _lcp(prev, list(token_ids)) // self.ship_page_size
+
     def crash(self) -> None:
         """Process crash: the (virtual) session KV pool is volatile — lose
         every remembered prefix and free all inference streams (their
@@ -211,7 +301,7 @@ class EchoLLMService:
         # Session-KV accounting, same semantics as the JAX engine's pool:
         # reuse the matching head of the remembered prefix (at least one
         # token recomputed), invalidate on divergence, full prefill on miss.
-        hit, warm, reused = False, False, 0
+        hit, reused, warm_source = False, 0, "none"
         if self.kv_reuse and cache_key is not None:
             prev = self._kv_prefix.get(cache_key)
             if prev is not None:
@@ -223,7 +313,9 @@ class EchoLLMService:
                     usable = min(len(prev), n - 1)
                     if usable > 0:
                         hit, reused = True, usable
-                        warm = self._kv_source.get(cache_key) == "prime"
+                        warm_source = _WARM_SOURCES.get(
+                            self._kv_source.get(cache_key, ""), "none"
+                        )
                         self._kv_prefix.move_to_end(cache_key)  # hit -> MRU
         n_prefill = n - reused
         n_gen = min(self.n_generate, max_new_tokens)
@@ -265,5 +357,6 @@ class EchoLLMService:
             cache_hit=hit,
             reused_tokens=reused,
             prefill_tokens=n_prefill,
-            warm_start=warm,
+            warm_start=warm_source != "none",
+            warm_source=warm_source,
         )

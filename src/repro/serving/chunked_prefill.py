@@ -139,6 +139,8 @@ def prime_fill_pages(
     token_ids: Sequence[int],
     entry,
     usable: int,
+    shipped: Optional[Sequence[bytes]] = None,
+    ship_have: int = 0,
 ) -> Optional[List[int]]:
     """Chunk-prefill ``token_ids`` straight into pages for a session-pool
     entry — the paged warm-start prime path, shared by the batched
@@ -152,7 +154,14 @@ def prime_fill_pages(
     fully-covering share is a pure-incref prime. Returns the page list
     (refs owned by the caller's entry-to-be) or None when the pool can't
     cover the context: prime is best-effort and never reclaims other
-    sessions' entries."""
+    sessions' entries.
+
+    With ``shipped``, this is the KV-page *install* path (KV-page
+    migration): ``shipped[i]`` holds the serialized bytes of full page
+    ``ship_have + i`` of ``token_ids``'s KV, already digest-verified by the
+    shipper. Those pages are imported directly — no attention compute —
+    and only the uncovered gap before them (shipper coverage can lag the
+    pool) plus the partial tail page is chunk-prefilled."""
     alloc = prefiller.alloc
     ps = alloc.page_size
     token_ids = list(token_ids)
@@ -182,7 +191,23 @@ def prime_fill_pages(
     pages = shared + fresh
     if tail_src is not None:
         alloc.copy_page(tail_src, fresh[0])
-    if cover < n:
+    if shipped is not None:
+        # install: import the verified page bytes into the fresh pages,
+        # compute only the gap below them and the tail beyond them. Shared
+        # (refcounted) pages are never import targets: the import range
+        # starts at max(skip, ship_have) and fresh pages begin at `skip`.
+        want = min(n // ps, ship_have + len(shipped))
+        gs = min(max(skip, ship_have), want)
+        for i in range(gs, want):
+            alloc.import_page_bytes(pages[i], shipped[i - ship_have])
+        if cover < gs * ps:
+            prefiller.prefill_ids(
+                pages, token_ids[: gs * ps], cover, n_skip=skip
+            )
+        t0 = max(cover, want * ps)
+        if t0 < n:
+            prefiller.prefill_ids(pages, token_ids, t0, n_skip=skip)
+    elif cover < n:
         prefiller.prefill_ids(pages, token_ids, cover, n_skip=skip)
     # the prime's compute must finish inside the off-hot-path window
     # (client think time), not contend with the next serving turn

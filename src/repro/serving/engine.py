@@ -57,7 +57,12 @@ from ..models.cache import trim_cache_prefix
 from ..tokenizer import EOS, IM_END, ByteLevelBPE, get_tokenizer
 from .chunked_prefill import PagedPrefiller, prime_fill_pages
 from .sampling import sample
-from .session_cache import CacheEntry, SessionCachePool, longest_common_prefix
+from .session_cache import (
+    CacheEntry,
+    SessionCachePool,
+    longest_common_prefix,
+    warm_source_of,
+)
 
 
 def _bucket(n: int, step: int) -> int:
@@ -126,6 +131,8 @@ def prime_session_pool(
     append_fn: Callable,   # (base_caches, suffix_ids, p0) -> (logits, caches, pos)
     prefill_fn: Callable,  # (ids) -> (logits, caches, pos)
     paged_fill: Optional[Callable] = None,  # (ids, entry|None, usable) -> pages|None
+    source: str = "prime",  # provenance label for a FRESH install ("prime"
+                            # = token recompute, "ship" = shipped KV pages)
 ) -> Tuple[bool, bool]:
     """Migration warm-start core shared by the single-stream engine and the
     batched scheduler (their ``prime`` methods differ only in the compute
@@ -176,7 +183,7 @@ def prime_session_pool(
         pages = paged_fill(token_ids, entry if usable > 0 else None, usable)
         if pages is None:
             return False, False
-        source = entry.source if usable > 0 else "prime"
+        source = entry.source if usable > 0 else source
         pool.put(
             cache_key,
             CacheEntry(token_ids=list(token_ids), pages=pages, source=source),
@@ -216,7 +223,7 @@ def prime_session_pool(
     # would still be running when the next serving turn starts and contend
     # with its measured prefill/decode.
     jax.block_until_ready(caches)
-    source = entry.source if usable > 0 else "prime"
+    source = entry.source if usable > 0 else source
     pool.put(
         cache_key,
         CacheEntry(token_ids=list(token_ids), caches=caches, source=source),
@@ -237,6 +244,9 @@ class GenerateResult:
     inference_ms: float = 0.0    # hot path: prefill + decode (pool update excluded)
     cache_update_ms: float = 0.0  # session-pool update, off the hot path
     warm_start: bool = False     # hit entry was installed by prime() (migration)
+    # provenance of the warm start: "tokens" (recompute prime), "pages"
+    # (shipped KV pages installed digest-verified), or "none"
+    warm_source: str = "none"
     ttft_ms: float = 0.0         # start -> first generated token determined
     decode_p50_ms: float = 0.0   # per-token decode latency percentiles
     decode_p99_ms: float = 0.0   # (amortized over each host-sync window)
@@ -424,6 +434,41 @@ class InferenceEngine:
             self.prime_ms += (time.perf_counter() - t0) * 1e3
         return warm
 
+    def install_shipped_pages(
+        self,
+        cache_key: str,
+        token_ids: List[int],
+        payloads: List[bytes],
+        have_pages: int,
+    ) -> bool:
+        """Install digest-verified shipped KV pages (KV-page migration,
+        docs/architecture.md "KV page shipping"): ``payloads`` hold the
+        serialized full pages ``[have_pages, have_pages + len(payloads))``
+        of ``token_ids``'s KV, exported by the origin engine's allocator.
+        They are imported straight into fresh pages; only the partial tail
+        page (and any coverage gap) is prefilled. Entry provenance is
+        ``"ship"`` so the next turn's warm start reports ``"pages"``.
+        Returns False when this engine can't take pages (dense pool, page
+        exhaustion) — the shipper then falls back to token recompute."""
+        pool = self.session_pool
+        if pool is None or pool.allocator is None:
+            return False
+        t0 = time.perf_counter()
+        paged_fill = lambda ids, entry, usable: prime_fill_pages(  # noqa: E731
+            pool, self._paged_prefiller(), ids, entry, usable,
+            shipped=payloads, ship_have=have_pages,
+        )
+        warm, stored = prime_session_pool(
+            pool, cache_key, list(token_ids),
+            self.max_len, self.max_len - 1 - 16,
+            self._append_prefill, self._full_prefill,
+            paged_fill=paged_fill, source="ship",
+        )
+        if stored:
+            self.prime_count += 1
+            self.prime_ms += (time.perf_counter() - t0) * 1e3
+        return warm
+
     # -- public API ------------------------------------------------------------
     def generate_ex(
         self,
@@ -488,7 +533,8 @@ class InferenceEngine:
         kind, cover = ("entry", usable) if usable > 0 else ("none", 0)
         if len(cross) * ps > cover:
             kind, cover = "cross", len(cross) * ps
-        warm = kind == "entry" and entry.source == "prime"
+        warm_source = warm_source_of(entry.source) if kind == "entry" else "none"
+        warm = warm_source != "none"
         skip = cover // ps
         tail_src: Optional[int] = None
         if kind == "entry" and cover % ps:
@@ -598,6 +644,7 @@ class InferenceEngine:
             inference_ms=inference_ms,
             cache_update_ms=cache_update_ms,
             warm_start=warm,
+            warm_source=warm_source,
             ttft_ms=ttft_ms,
             decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
             decode_p99_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
@@ -647,7 +694,7 @@ class InferenceEngine:
             logits, caches, pos = self._append_prefill(
                 base, input_ids[stok:], stok
             )
-            hit, reused, warm = True, stok, False
+            hit, reused, warm_source = True, stok, "none"
             pool.shared_hits += 1
             pool.shared_tokens += stok
         elif entry is not None and usable > 0:
@@ -667,10 +714,11 @@ class InferenceEngine:
                 base, input_ids[usable:], usable
             )
             hit, reused = True, usable
-            warm = entry.source == "prime"
+            warm_source = warm_source_of(entry.source)
         else:
             logits, caches, pos = self._full_prefill(input_ids)
-            hit, reused, warm = False, 0, False
+            hit, reused, warm_source = False, 0, "none"
+        warm = warm_source != "none"
         prefilled = n - reused
 
         # Decode with batched host sync: tokens stay on device; every
@@ -730,6 +778,7 @@ class InferenceEngine:
             inference_ms=inference_ms,
             cache_update_ms=cache_update_ms,
             warm_start=warm,
+            warm_source=warm_source,
             ttft_ms=ttft_ms,
             decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
             decode_p99_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
@@ -766,6 +815,10 @@ class JaxLLMService:
     engine: InferenceEngine
     tokenizer: ByteLevelBPE
     kv_reuse: bool = True
+    # Measured prefill cost constant for the KV-ship cost model (ms per
+    # token on THIS node's accelerator; heterogeneous fleets give weak
+    # nodes a larger value). 0 disables shipping for this node.
+    ship_prefill_ms_per_token: float = 0.0
     # Single-stream queue model for the submit/await path: the sim time the
     # engine frees up, valid for `_clock_owner`'s clock (a service reused
     # across clusters/networks restarts at idle).
@@ -820,6 +873,75 @@ class JaxLLMService:
         published on the node's heartbeat for residency-aware routing)."""
         pool = self.engine.session_pool
         return pool.resident_keys() if pool is not None else {}
+
+    # -- KV-page shipping hooks (repro.store.kv_ship) -----------------------
+    def kv_ship_profile(self):
+        """This node's shipping constants, or None when it can't ship
+        (reuse off, dense pool, or no measured prefill constant)."""
+        pool = self.engine.session_pool
+        if (
+            not self.kv_reuse
+            or pool is None
+            or pool.allocator is None
+            or self.ship_prefill_ms_per_token <= 0
+        ):
+            return None
+        from ..store.kv_ship import NodeShipProfile
+
+        alloc = pool.allocator
+        return NodeShipProfile(
+            page_size=alloc.page_size,
+            page_wire_bytes=alloc.page_bytes,
+            prefill_ms_per_token=self.ship_prefill_ms_per_token,
+        )
+
+    def export_kv_pages(self, cache_key: str):
+        """Serialize the resident *full* pages of ``cache_key``'s session
+        entry (native-dtype page bytes — the round trip is bit-exact).
+        None when the key isn't resident as pages."""
+        pool = self.engine.session_pool
+        entry = pool.peek(cache_key) if pool is not None else None
+        if entry is None or not entry.paged:
+            return None
+        alloc = pool.allocator
+        full = entry.pos // alloc.page_size
+        if full <= 0:
+            return None
+        from ..store.kv_ship import PageShipment
+
+        return PageShipment(
+            token_ids=list(entry.token_ids[: entry.pos]),
+            payloads=[
+                alloc.export_page_bytes(p) for p in entry.pages[:full]
+            ],
+        )
+
+    def install_kv_pages(
+        self,
+        cache_key: str,
+        token_ids: List[int],
+        payloads: List[bytes],
+        have_pages: int,
+    ) -> bool:
+        """Install digest-verified shipped pages into the session pool
+        (the KVShipper's installer hook)."""
+        if not self.kv_reuse:
+            return False
+        return self.engine.install_shipped_pages(
+            cache_key, list(token_ids), payloads, have_pages
+        )
+
+    def resident_ship_pages(self, cache_key: str, token_ids: List[int]) -> int:
+        """Full prefix pages of ``token_ids`` already resident for
+        ``cache_key`` — shipped deltas skip them."""
+        pool = self.engine.session_pool
+        entry = pool.peek(cache_key) if pool is not None else None
+        if entry is None or not entry.paged or pool.allocator is None:
+            return 0
+        lcp = longest_common_prefix(
+            entry.token_ids[: entry.pos], list(token_ids)
+        )
+        return lcp // pool.allocator.page_size
 
     def crash(self) -> None:
         """Process crash: the session KV pool is device memory — gone. The
@@ -885,6 +1007,7 @@ class JaxLLMService:
             prefill_tokens=res.prefill_tokens,
             cache_update_ms=res.cache_update_ms,
             warm_start=res.warm_start,
+            warm_source=res.warm_source,
             ttft_ms=res.ttft_ms,
             decode_p50_ms=res.decode_p50_ms,
             decode_p99_ms=res.decode_p99_ms,

@@ -44,7 +44,6 @@ can never observe another tenant's subsequent writes.
 
 from __future__ import annotations
 
-import hashlib
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
@@ -54,35 +53,13 @@ import numpy as np
 
 from ..models import ModelConfig, layer_groups, supports_append
 from ..models.cache import init_paged_pool
+# Canonical digest lives with the KV-ship wire protocol (jax-free store
+# layer) and is re-exported here for the original PR-7 callers.
+from ..store.kv_ship import page_digests  # noqa: F401  (re-export)
 
 # Physical page 0 is never allocated: page-table padding points here and
 # inactive decode lanes write here. Its contents are garbage by design.
 SCRATCH_PAGE = 0
-
-
-def page_digests(
-    token_ids: Sequence[int], page_size: int, limit: Optional[int] = None
-) -> List[bytes]:
-    """Chained content digests of the page-aligned full blocks of
-    ``token_ids``: digest ``i`` commits to tokens ``[0, (i+1)*page_size)``,
-    not just block ``i``, so two sequences share digest ``i`` iff their
-    entire prefixes through page ``i`` are identical — exactly the
-    condition under which their KV pages are interchangeable (KV depends on
-    the full causal prefix and absolute positions, and the paged layout
-    pins slot == position). Only *full* pages are digested; a partial tail
-    page is never shareable. ``limit`` caps the number of digests."""
-    n_full = len(token_ids) // page_size
-    if limit is not None:
-        n_full = min(n_full, max(0, limit))
-    out: List[bytes] = []
-    h = hashlib.blake2b(digest_size=16)
-    for i in range(n_full):
-        block = np.asarray(
-            token_ids[i * page_size : (i + 1) * page_size], np.int64
-        )
-        h.update(block.tobytes())
-        out.append(h.digest())
-    return out
 
 
 class PrefixPageIndex:
@@ -343,6 +320,44 @@ class PagedKVAllocator:
         self.pools = self._copy_page_fn(
             self.pools, jnp.int32(src), jnp.int32(dst)
         )
+
+    def export_page_bytes(self, page: int) -> bytes:
+        """Serialize one physical page's bytes for shipping: per layer
+        group, the K block then the V block, each ``(L, page_size, KV, Dh)``
+        in the pool's native dtype, C order, concatenated. The native dtype
+        (bf16 for the serving configs) makes the round trip bit-exact:
+        ``import_page_bytes`` on an identically-configured pool reproduces
+        the page byte-for-byte, so a shipped prime is greedy-equivalent to
+        the local recompute it replaces."""
+        parts: List[bytes] = []
+        for pool in self.pools:
+            for name in ("k", "v"):
+                parts.append(np.asarray(pool[name][:, page]).tobytes())
+        return b"".join(parts)
+
+    def import_page_bytes(self, page: int, data: bytes) -> None:
+        """Install bytes produced by :meth:`export_page_bytes` (on a pool
+        with the same model config / page_size / dtype) into ``page``. The
+        caller owns the page and is responsible for content verification —
+        this is a raw byte move, the digest check happens at the shipping
+        layer against the token ground truth."""
+        assert page != SCRATCH_PAGE, "refusing to import into the scratch page"
+        off = 0
+        new_pools: List[Dict[str, jnp.ndarray]] = []
+        for pool in self.pools:
+            entry: Dict[str, jnp.ndarray] = {}
+            for name in ("k", "v"):
+                a = pool[name]
+                shape = (a.shape[0],) + tuple(a.shape[2:])  # (L, ps, KV, Dh)
+                n_bytes = int(np.prod(shape)) * a.dtype.itemsize
+                block = np.frombuffer(
+                    data[off : off + n_bytes], dtype=a.dtype
+                ).reshape(shape)
+                off += n_bytes
+                entry[name] = a.at[:, page].set(jnp.asarray(block))
+            new_pools.append(entry)
+        assert off == len(data), (off, len(data), self.page_bytes)
+        self.pools = new_pools
 
     def write_through(
         self, pages: Sequence[int], dense: List[Dict], n_skip: int = 0

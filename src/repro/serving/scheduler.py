@@ -73,6 +73,7 @@ from .session_cache import (
     CacheEntry,
     SessionCachePool,
     longest_common_prefix,
+    warm_source_of,
 )
 
 
@@ -88,6 +89,7 @@ class SlotState:
     token_ids: List[int] = field(default_factory=list)
     reused_tokens: int = 0
     warm_start: bool = False
+    warm_source: str = "none"    # "tokens" | "pages" | "none"
     # peak number of occupied slots observed while this request decoded
     batch_size: int = 1
     # chunked-prefill plan (paged mode): prompt tokens not yet in pages.
@@ -112,6 +114,7 @@ class FinishedRequest:
     cache_hit: bool = False
     reused_tokens: int = 0
     warm_start: bool = False
+    warm_source: str = "none"    # "tokens" | "pages" | "none"
     # peak decode batch this request shared (1 = it ran alone)
     batch_size: int = 1
     # wall-clock latency: submit -> first generated token determined, and
@@ -359,7 +362,10 @@ class BatchedServer:
                     merged[k] = self._put_entry(big[k], small[k], idx, k)
             new_caches.append(merged)
         self.caches = new_caches
-        warm = entry is not None and usable > 0 and entry.source == "prime"
+        warm_source = (
+            warm_source_of(entry.source)
+            if entry is not None and usable > 0 else "none"
+        )
 
         self._pos[idx] = int(pos[0])
         self._next_tok[idx] = int(jnp.argmax(logits[0]))
@@ -367,7 +373,8 @@ class BatchedServer:
         self.slots[idx] = SlotState(
             request_id=rid, pos=n, max_new=max_new,
             cache_key=cache_key, token_ids=list(ids), reused_tokens=usable,
-            warm_start=warm, prefilled=True,
+            warm_start=warm_source != "none",
+            warm_source=warm_source, prefilled=True,
             ttft_ms=(now - self._submit_times[rid]) * 1e3, last_tok_t=now,
         )
         return True
@@ -461,7 +468,7 @@ class BatchedServer:
             kind, cover = "cross", len(cross) * ps
         if len(wave) * ps > cover:
             kind, cover = "wave", len(wave) * ps
-        warm = kind == "entry" and entry.source == "prime"
+        warm_source = warm_source_of(entry.source) if kind == "entry" else "none"
 
         skip = cover // ps  # leading read-only full shared pages
         tail_src: Optional[int] = None
@@ -500,7 +507,7 @@ class BatchedServer:
         self.slots[idx] = SlotState(
             request_id=rid, pos=n, max_new=max_new,
             cache_key=cache_key, token_ids=list(ids), reused_tokens=cover,
-            warm_start=warm,
+            warm_start=warm_source != "none", warm_source=warm_source,
             prefilled=False, pending=list(ids[cover:]), prefill_p0=cover,
             n_skip=skip,
         )
@@ -697,6 +704,7 @@ class BatchedServer:
                 cache_hit=st.reused_tokens > 0,
                 reused_tokens=st.reused_tokens,
                 warm_start=st.warm_start,
+                warm_source=st.warm_source,
                 batch_size=st.batch_size,
                 ttft_ms=st.ttft_ms,
                 decode_p50_ms=float(np.percentile(gaps, 50)) if gaps else 0.0,
@@ -929,6 +937,32 @@ class BatchedServer:
             self.session_pool, self._prefiller, token_ids, entry, usable
         )
 
+    def install_shipped_pages(
+        self,
+        cache_key: str,
+        token_ids: List[int],
+        payloads: List[bytes],
+        have_pages: int,
+    ) -> bool:
+        """Install digest-verified shipped KV pages into the shared session
+        pool — the batched twin of
+        :meth:`repro.serving.engine.InferenceEngine.install_shipped_pages`.
+        Paged servers only (a full-width server has no page pool to import
+        into — the shipper falls back to token recompute)."""
+        if not self.paged or self.session_pool is None:
+            return False
+        paged_fill = lambda ids, entry, usable: prime_fill_pages(  # noqa: E731
+            self.session_pool, self._prefiller, ids, entry, usable,
+            shipped=payloads, ship_have=have_pages,
+        )
+        warm, _ = prime_session_pool(
+            self.session_pool, cache_key, list(token_ids),
+            self.max_len, self.max_len - 2,
+            self._append_suffix, self._bucketed_prefill,
+            paged_fill=paged_fill, source="ship",
+        )
+        return warm
+
 
 @dataclass
 class _PendingBatched:
@@ -966,11 +1000,15 @@ class BatchedLLMService:
         server: BatchedServer,
         tokenizer: ByteLevelBPE,
         tokenize_scale: float = 1.0,
+        ship_prefill_ms_per_token: float = 0.0,
     ) -> None:
         self.model = model
         self.server = server
         self.tokenizer = tokenizer
         self.tokenize_scale = tokenize_scale
+        # measured prefill constant for the KV-ship cost model (0 = this
+        # node does not participate in page shipping)
+        self.ship_prefill_ms_per_token = ship_prefill_ms_per_token
         self._pending: Dict[int, _PendingBatched] = {}
         self._pump_scheduled = False
         self._busy_until = 0.0
@@ -1023,6 +1061,67 @@ class BatchedLLMService:
 
     def prime(self, cache_key: str, token_ids: List[int]) -> bool:
         return self.server.prime(cache_key, list(token_ids))
+
+    # -- KV-page shipping hooks (repro.store.kv_ship) -------------------
+    def kv_ship_profile(self):
+        """Shipping constants for the cost model; None when this server
+        can't ship (full-width caches, no pool, or no measured prefill
+        constant)."""
+        srv = self.server
+        if (
+            not srv.paged
+            or srv.session_pool is None
+            or self.ship_prefill_ms_per_token <= 0
+        ):
+            return None
+        from ..store.kv_ship import NodeShipProfile
+
+        return NodeShipProfile(
+            page_size=srv.allocator.page_size,
+            page_wire_bytes=srv.allocator.page_bytes,
+            prefill_ms_per_token=self.ship_prefill_ms_per_token,
+        )
+
+    def export_kv_pages(self, cache_key: str):
+        """Serialize the resident full pages of ``cache_key``'s pool entry
+        (native-dtype bytes — bit-exact round trip), or None."""
+        pool = self.server.session_pool
+        entry = pool.peek(cache_key) if pool is not None else None
+        if entry is None or not entry.paged:
+            return None
+        alloc = self.server.allocator
+        full = entry.pos // alloc.page_size
+        if full <= 0:
+            return None
+        from ..store.kv_ship import PageShipment
+
+        return PageShipment(
+            token_ids=list(entry.token_ids[: entry.pos]),
+            payloads=[
+                alloc.export_page_bytes(p) for p in entry.pages[:full]
+            ],
+        )
+
+    def install_kv_pages(
+        self,
+        cache_key: str,
+        token_ids: List[int],
+        payloads: List[bytes],
+        have_pages: int,
+    ) -> bool:
+        return self.server.install_shipped_pages(
+            cache_key, list(token_ids), payloads, have_pages
+        )
+
+    def resident_ship_pages(self, cache_key: str, token_ids: List[int]) -> int:
+        pool = self.server.session_pool
+        entry = pool.peek(cache_key) if pool is not None else None
+        if entry is None or not entry.paged:
+            return 0
+        lcp = longest_common_prefix(
+            entry.token_ids[: entry.pos], list(token_ids)
+        )
+        return lcp // self.server.allocator.page_size
 
     def resident_keys(self) -> Dict[str, int]:
         """Cache key -> resident KV token count (fleet telemetry surface).
@@ -1177,6 +1276,7 @@ class BatchedLLMService:
             reused_tokens=f.reused_tokens,
             prefill_tokens=n_input - f.reused_tokens,
             warm_start=f.warm_start,
+            warm_source=f.warm_source,
             queue_ms=queue_ms,
             batch_size=f.batch_size,
             ttft_ms=f.ttft_ms,

@@ -53,6 +53,19 @@ def longest_common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
     return n
 
 
+# Entry provenance -> Timing.kv_warm_source label: how a warm start happened.
+# "serve" entries are the node's own hot sessions — reusing them is a plain
+# cache hit, not a warm start.
+WARM_SOURCES = {"prime": "tokens", "ship": "pages"}
+
+
+def warm_source_of(source: str) -> str:
+    """Map a cache entry's provenance to the warm-start provenance label
+    reported in :class:`repro.core.protocol.Timing` ("tokens" | "pages" |
+    "none")."""
+    return WARM_SOURCES.get(source, "none")
+
+
 @dataclass
 class CacheEntry:
     """KV state for the token prefix ``token_ids``. Exactly one of two
@@ -60,8 +73,10 @@ class CacheEntry:
     with kv_pos trimmed to ``pos`` — or ``pages`` — a list of physical page
     ids in the owning pool's allocator (paged mode; the entry owns one ref
     per page). ``source`` records how the entry got here: ``"serve"`` (left
-    behind by a turn served on this node) or ``"prime"`` (installed by the
-    migration warm-start hook on context-replication arrival)."""
+    behind by a turn served on this node), ``"prime"`` (installed by the
+    migration warm-start hook via token recompute on context-replication
+    arrival), or ``"ship"`` (installed from digest-verified KV pages shipped
+    by the origin node — docs/architecture.md, "KV page shipping")."""
 
     token_ids: List[int]
     caches: Optional[List[Dict]] = None

@@ -196,7 +196,12 @@ class DistributedKVStore:
         successfully apply on ``node``'s local replica. Fired *after* the
         last-writer-wins version check — stale deliveries never notify.
         Local writes by ``node`` itself do not notify either (the writing
-        node already holds whatever state the hook would rebuild)."""
+        node already holds whatever state the hook would rebuild).
+
+        This is where the ship-vs-recompute decision lives: EdgeNode's hook
+        either token-recompute-primes the serving engine (PR-2 warm start)
+        or asks the KV-ship layer (:mod:`repro.store.kv_ship`) to pull the
+        origin's KV pages, per the measured cost model."""
         self._apply_hooks.setdefault(node, []).append(hook)
 
     def _notify_apply(self, node: str, keygroup: str, key: str, vv: VersionedValue) -> None:
@@ -428,6 +433,21 @@ class DistributedKVStore:
             self._try_ship(item)
 
         self.network.schedule(at, fire)
+
+    def context_ids(
+        self, node: str, keygroup: str, key: str
+    ) -> Optional[List[int]]:
+        """Token ids of ``node``'s *current* replica value for ``key``, or
+        None if absent / not tokenized. The KV-ship layer uses this as the
+        receiver-side ground truth: shipped page digests are verified
+        against the replica's own tokens, never against anything that
+        crossed the wire with the pages."""
+        if not self.has_replica(node, keygroup):
+            return None
+        vv = self.get(node, keygroup, key)
+        if vv is None or not hasattr(vv.value, "ids"):
+            return None
+        return list(vv.value.ids)
 
     # -- churn handling -------------------------------------------------------
     def kick_outbox(self, node: str) -> int:

@@ -33,6 +33,12 @@ FAIL_NODE_DOWN = "node-down"
 FAIL_PARTITIONED = "partitioned"
 FAIL_DROPPED = "dropped"
 
+# TCP-ish fixed framing overhead billed per message on top of the payload —
+# the handshakes tcpdump catches. Exposed so byte-accounting tests (e.g. the
+# KV-ship billed-bytes-equal-shipped-bytes assertions) can reconstruct the
+# exact wire total for a message count instead of hard-coding 66.
+MESSAGE_OVERHEAD_BYTES = 66
+
 
 @dataclass
 class SimClock:
@@ -65,7 +71,7 @@ class TrafficCounter:
     bytes_total: int = 0
     messages: int = 0
     # TCP-ish fixed overhead per message, like the handshakes tcpdump catches
-    per_message_overhead: int = 66
+    per_message_overhead: int = MESSAGE_OVERHEAD_BYTES
 
     def record(self, n_bytes: int) -> int:
         wire = n_bytes + self.per_message_overhead
